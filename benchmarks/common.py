@@ -1,0 +1,60 @@
+"""Benchmark utilities: timing, synthetic graphs, the compared systems.
+
+CPU-host proxy measurements: absolute numbers are not TPU numbers, but the
+*algorithmic* contrasts the paper measures (serialized scan vs parallel
+compare-reduce; hash-map-free reindex; engine-config sensitivity) are
+preserved. TPU-side evidence comes from the dry-run roofline (EXPERIMENTS.md
+§Roofline), which this harness complements.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (COO, EngineConfig, SENTINEL, build_pointer_array,
+                        build_pointer_array_serial, convert, convert_xla,
+                        edge_ordering, edge_ordering_xla, preprocess,
+                        preprocess_xla_baseline, random_coo, sample_subgraph,
+                        select_floyd, select_keysort, select_reservoir)
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1, **kwargs) -> float:
+    """Median wall-time per call in microseconds (jit-compiled, blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def make_graph(n_edges: int, seed: int = 0, deg: float = 8.0) -> COO:
+    n_nodes = max(64, int(n_edges / deg))
+    rng = np.random.default_rng(seed)
+    dst, src = random_coo(rng, n_nodes, n_edges)
+    return COO.from_arrays(dst, src, n_nodes)
+
+
+# The compared systems (paper §VI): name → jitted preprocess callable.
+def system_autognn(cfg: EngineConfig):
+    @partial(jax.jit, static_argnames=("fanouts",))
+    def run(coo, batch_nodes, fanouts, key):
+        return preprocess(coo, batch_nodes, fanouts, key, cfg)
+    return run
+
+
+def system_xla_baseline():
+    @partial(jax.jit, static_argnames=("fanouts",))
+    def run(coo, batch_nodes, fanouts, key):
+        return preprocess_xla_baseline(coo, batch_nodes, fanouts, key)
+    return run
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

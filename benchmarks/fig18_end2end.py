@@ -1,0 +1,79 @@
+"""Paper Fig. 18: end-to-end preprocessing latency across systems.
+
+Systems (host-proxy analogs, DESIGN.md §2):
+  serial   — the conventional path the paper calls "CPU": serialized
+             pointer-array scan + reservoir sampling (dependence chains)
+  xla      — "GPU" analog: comparison sort + searchsorted + keysort top-k
+  autopre  — AutoGNN engines, static half-lane split
+  statpre  — AutoGNN engines, time-multiplexed fixed config (tuned mid-size)
+  dynpre   — AutoGNN engines, cost-model-selected config per graph
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (EngineConfig, Workload, best_config,
+                        bitstream_library, build_pointer_array_serial,
+                        edge_ordering_xla, preprocess,
+                        preprocess_xla_baseline, select_reservoir)
+from repro.core.pipeline import convert_xla, sample_subgraph
+
+from .common import emit, make_graph, time_fn
+
+SIZES = [1 << 14, 1 << 17, 1 << 20]
+BATCH = 256
+FANOUTS = (10, 10)
+SERIAL_MAX_E = 1 << 14  # the lax.scan serial baseline is O(E) sequential
+
+
+def _serial_system(coo, bn, key):
+    """Conventional serialized preprocessing (paper's CPU column)."""
+    sc = edge_ordering_xla(coo)
+    ptr = build_pointer_array_serial(sc.dst, coo.n_nodes)
+    from repro.core import CSC
+    csc = CSC(ptr=ptr, idx=sc.src, n_edges=coo.n_edges, n_nodes=coo.n_nodes)
+    cfg = EngineConfig(selection="reservoir")
+    return sample_subgraph(csc, bn, FANOUTS, key, cfg)
+
+
+def run() -> dict:
+    lib = bitstream_library()
+    statpre_cfg = EngineConfig(w_upe=4096, n_upe=16, w_scr=2048, n_scr=512)
+    autopre_cfg = EngineConfig(w_upe=4096, n_upe=8, w_scr=2048, n_scr=512)
+    out = {}
+    for e in SIZES:
+        coo = make_graph(e)
+        bn = jnp.arange(BATCH, dtype=jnp.int32)
+        key = jax.random.PRNGKey(0)
+        row = {}
+
+        if e <= SERIAL_MAX_E:
+            t = time_fn(jax.jit(_serial_system), coo, bn, key)
+            row["serial"] = t
+            emit(f"fig18/serial/e={e}", t)
+
+        t_xla = time_fn(preprocess_xla_baseline, coo, bn,
+                        fanouts=FANOUTS, key=key)
+        row["xla"] = t_xla
+        emit(f"fig18/xla/e={e}", t_xla)
+
+        for name, cfg in [("autopre", autopre_cfg), ("statpre", statpre_cfg)]:
+            t = time_fn(preprocess, coo, bn, fanouts=FANOUTS, key=key,
+                        cfg=cfg)
+            row[name] = t
+            emit(f"fig18/{name}/e={e}", t,
+                 f"speedup_vs_xla={t_xla / t:.2f}")
+
+        w = Workload(n=coo.n_nodes, e=e, l=len(FANOUTS), k=FANOUTS[0],
+                     b=BATCH)
+        dyn_cfg = best_config(w, lib)
+        t = time_fn(preprocess, coo, bn, fanouts=FANOUTS, key=key,
+                    cfg=dyn_cfg)
+        row["dynpre"] = t
+        emit(f"fig18/dynpre/e={e}", t,
+             f"cfg={dyn_cfg.key};speedup_vs_xla={t_xla / t:.2f}")
+        out[e] = row
+    return out

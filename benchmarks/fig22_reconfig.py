@@ -1,0 +1,68 @@
+"""Paper Fig. 22/23 + Fig. 28: engine-configuration ablation and dynamic
+reconfiguration benefit.
+
+DynSCR/DynUPE analog: sweep SCR (count-tile) and UPE (chunk/lanes) knobs per
+graph and show the optimum differs across graphs — the reason a fixed
+configuration (StatPre) loses to DynPre; then replay the paper's
+consecutive-diverse-graphs scenario (Fig. 28a).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (EngineConfig, build_pointer_array, edge_ordering,
+                        preprocess)
+
+from .common import emit, make_graph, time_fn
+
+GRAPHS = {"small_dense": (1 << 14, 4.0), "mid": (1 << 17, 8.0),
+          "large_sparse": (1 << 19, 32.0)}
+UPE_SWEEP = [(1024, 4), (4096, 8), (16384, 16)]
+SCR_SWEEP = [256, 1024, 4096]
+
+
+def run() -> dict:
+    out = {}
+    for gname, (e, deg) in GRAPHS.items():
+        coo = make_graph(e, deg=deg)
+        best_upe, best_t = None, float("inf")
+        for wu, nu in UPE_SWEEP:
+            fn = jax.jit(partial(edge_ordering, chunk=wu, map_batch=nu))
+            t = time_fn(fn, coo, iters=2)
+            emit(f"fig22/upe/{gname}/w={wu},n={nu}", t)
+            if t < best_t:
+                best_upe, best_t = (wu, nu), t
+        sc = jax.jit(partial(edge_ordering, chunk=4096, map_batch=8))(coo)
+        best_scr, best_ts = None, float("inf")
+        for blk in SCR_SWEEP:
+            fn = jax.jit(partial(build_pointer_array, n_nodes=coo.n_nodes,
+                                 block=blk))
+            t = time_fn(fn, sc.dst, iters=2)
+            emit(f"fig22/scr/{gname}/block={blk}", t)
+            if t < best_ts:
+                best_scr, best_ts = blk, t
+        out[gname] = {"best_upe": best_upe, "best_scr": best_scr}
+        emit(f"fig22/best/{gname}", best_t + best_ts,
+             f"upe={best_upe};scr={best_scr}")
+
+    # Fig. 28a: consecutive diverse graphs — StatPre (config tuned for the
+    # first graph) vs DynPre (re-tuned per graph, paying reconfig cost).
+    from repro.core.reconfig import RECONFIG_S_PARTIAL
+    g1 = make_graph(1 << 14, deg=4.0)
+    g2 = make_graph(1 << 19, deg=32.0)
+    cfg1 = EngineConfig(w_upe=UPE_SWEEP[0][0], n_upe=UPE_SWEEP[0][1])
+    cfg2 = EngineConfig(w_upe=UPE_SWEEP[-1][0], n_upe=UPE_SWEEP[-1][1])
+    bn = jnp.arange(64, dtype=jnp.int32)
+    key = jax.random.PRNGKey(0)
+    stat = (time_fn(preprocess, g1, bn, fanouts=(5, 5), key=key, cfg=cfg1) +
+            time_fn(preprocess, g2, bn, fanouts=(5, 5), key=key, cfg=cfg1))
+    dyn = (time_fn(preprocess, g1, bn, fanouts=(5, 5), key=key, cfg=cfg1) +
+           time_fn(preprocess, g2, bn, fanouts=(5, 5), key=key, cfg=cfg2)
+           + RECONFIG_S_PARTIAL * 1e6)
+    emit("fig28/statpre_then_diverse", stat)
+    emit("fig28/dynpre_then_diverse", dyn, f"ratio={stat / dyn:.2f}")
+    out["fig28"] = {"statpre_us": stat, "dynpre_us": dyn}
+    return out

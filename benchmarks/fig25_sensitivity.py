@@ -1,0 +1,59 @@
+"""Paper Fig. 25: sensitivity to GNN model, #layers, and fanout k."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import EngineConfig, preprocess
+
+from .common import emit, make_graph, time_fn
+
+E = 1 << 17
+BATCH = 128
+
+
+def run() -> dict:
+    coo = make_graph(E)
+    bn = jnp.arange(BATCH, dtype=jnp.int32)
+    key = jax.random.PRNGKey(0)
+    cfg = EngineConfig(w_upe=4096, n_upe=8)
+    out = {}
+
+    # layers sweep (fanout 10 per hop; node explosion with depth)
+    for layers in [1, 2, 3]:
+        fanouts = tuple([10] * layers)
+        t = time_fn(preprocess, coo, bn, fanouts=fanouts, key=key, cfg=cfg,
+                    iters=2)
+        emit(f"fig25/layers={layers}", t)
+        out[f"layers={layers}"] = t
+
+    # k sweep at 2 layers
+    for k in [5, 10, 20]:
+        t = time_fn(preprocess, coo, bn, fanouts=(k, k), key=key, cfg=cfg,
+                    iters=2)
+        emit(f"fig25/k={k}", t)
+        out[f"k={k}"] = t
+
+    # model sweep: preprocessing is model-independent; inference differs.
+    from repro.models.gnn import GraphBatch, gnn_apply, gnn_init
+    n, d_feat = 4096, 64
+    rngb = jax.random.PRNGKey(1)
+    dst = jnp.sort(jax.random.randint(rngb, (n * 8,), 0, n))
+    src = jax.random.randint(jax.random.PRNGKey(2), (n * 8,), 0, n)
+    batch = GraphBatch(dst, src, jax.random.normal(rngb, (n, d_feat)),
+                       jnp.zeros((n,), jnp.int32), jnp.ones((n,), bool),
+                       edge_feat=jax.random.normal(rngb, (n * 8, 4)))
+    for arch in ["graphsage-reddit", "gat-cora", "gatedgcn",
+                 "meshgraphnet"]:
+        mcfg = get_config(arch, smoke=True)
+        node_reg = mcfg.kind == "meshgraphnet"
+        params = gnn_init(mcfg, jax.random.PRNGKey(3), d_in=d_feat,
+                          d_edge=4, n_classes=0 if node_reg else 8)
+        t = time_fn(jax.jit(lambda p, b: gnn_apply(mcfg, p, b)), params,
+                    batch, iters=2)
+        emit(f"fig25/model={arch}", t)
+        out[f"model={arch}"] = t
+    return out

@@ -1,0 +1,66 @@
+"""Paper Fig. 5: preprocessing share of end-to-end GNN service latency.
+
+Service = preprocess (convert + sample + reindex) + 2-layer GraphSAGE
+inference on the sampled subgraph (the paper's eval model, k=10).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import EngineConfig, gather_features, preprocess
+from repro.models.gnn import GraphBatch, gnn_apply
+
+from .common import emit, make_graph, time_fn
+
+SIZES = [1 << 14, 1 << 17, 1 << 20]
+BATCH = 256
+FANOUTS = (10, 10)
+D_FEAT = 64
+
+
+def _subgraph_to_batch(sub, feats):
+    from repro.core import SENTINEL
+    x = gather_features(sub, feats)
+    e = sub.csc.idx.shape[0]
+    ptr = sub.csc.ptr
+    pos = jnp.arange(e, dtype=jnp.int32)
+    dst = jnp.searchsorted(ptr, pos, side="right",
+                           method="sort").astype(jnp.int32) - 1
+    dst = jnp.where(pos < sub.csc.n_edges, dst, SENTINEL)
+    n = x.shape[0]
+    return GraphBatch(edge_dst=dst, edge_src=sub.csc.idx, node_feat=x,
+                      labels=jnp.zeros((n,), jnp.int32),
+                      label_mask=jnp.arange(n) < BATCH)
+
+
+def run() -> dict:
+    cfg = get_config("graphsage-reddit")
+    ecfg = EngineConfig(w_upe=4096, n_upe=8)
+    import dataclasses
+    params = None
+    out = {}
+    for e in SIZES:
+        coo = make_graph(e)
+        feats = jnp.zeros((coo.n_nodes, D_FEAT), jnp.float32)
+        bn = jnp.arange(BATCH, dtype=jnp.int32)
+        key = jax.random.PRNGKey(0)
+
+        t_pre = time_fn(preprocess, coo, bn, fanouts=FANOUTS, key=key,
+                        cfg=ecfg)
+        sub = preprocess(coo, bn, fanouts=FANOUTS, key=key, cfg=ecfg)
+        batch = _subgraph_to_batch(sub, feats)
+        if params is None:
+            from repro.models.gnn import gnn_init
+            params = gnn_init(cfg, jax.random.PRNGKey(1), d_in=D_FEAT,
+                              n_classes=41)
+        inf_fn = jax.jit(lambda p, b: gnn_apply(cfg, p, b))
+        t_inf = time_fn(inf_fn, params, batch)
+        frac = t_pre / (t_pre + t_inf)
+        emit(f"fig5/preprocess/e={e}", t_pre, f"frac={frac:.3f}")
+        emit(f"fig5/inference/e={e}", t_inf, "")
+        out[e] = frac
+    return out

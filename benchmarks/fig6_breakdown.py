@@ -1,0 +1,49 @@
+"""Paper Fig. 6: latency breakdown of the four preprocessing tasks across
+graph sizes (+ Fig. 5's headline observation that conversion dominates as
+graphs grow)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (EngineConfig, build_pointer_array,
+                        build_reindex_map, edge_ordering, sample_khop)
+from repro.core.pipeline import convert
+
+from .common import emit, make_graph, time_fn
+
+SIZES = [1 << 14, 1 << 17, 1 << 20]
+FANOUTS = (10, 10)
+BATCH = 256
+
+
+def run() -> dict:
+    cfg = EngineConfig(w_upe=4096, n_upe=8)
+    out = {}
+    for e in SIZES:
+        coo = make_graph(e)
+        order_fn = jax.jit(partial(edge_ordering, chunk=cfg.w_upe,
+                                   map_batch=cfg.n_upe))
+        t_order = time_fn(order_fn, coo)
+        sorted_coo = order_fn(coo)
+        reshape_fn = jax.jit(partial(build_pointer_array,
+                                     n_nodes=coo.n_nodes))
+        t_reshape = time_fn(reshape_fn, sorted_coo.dst)
+        csc = jax.jit(partial(convert, cfg=cfg))(coo)
+        bn = jnp.arange(BATCH, dtype=jnp.int32)
+        key = jax.random.PRNGKey(0)
+        sel_fn = jax.jit(partial(sample_khop, fanouts=FANOUTS,
+                                 selection="floyd"))
+        t_select = time_fn(sel_fn, csc, bn, key=key)
+        nodes, _, _ = sel_fn(csc, bn, key=key)
+        reidx_fn = jax.jit(lambda v: build_reindex_map(v).order)
+        t_reidx = time_fn(reidx_fn, nodes)
+        total = t_order + t_reshape + t_select + t_reidx
+        for name, t in [("ordering", t_order), ("reshaping", t_reshape),
+                        ("selecting", t_select), ("reindexing", t_reidx)]:
+            emit(f"fig6/{name}/e={e}", t, f"frac={t / total:.3f}")
+        out[e] = dict(ordering=t_order, reshaping=t_reshape,
+                      selecting=t_select, reindexing=t_reidx)
+    return out

@@ -1,0 +1,128 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) on the single-pod mesh:
+  compute    = HLO_FLOPs / peak_FLOPs            (cost_analysis is per-chip)
+  memory     = HLO_bytes / HBM_bw
+  collective = collective operand bytes / ICI_bw (parsed from compiled HLO)
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per chip; the ratio
+MODEL_FLOPS / HLO_FLOPs flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+import glob
+import os
+
+PEAK = 197e12  # bf16 FLOP/s per chip (v5e)
+HBM = 819e9  # B/s
+ICI = 50e9  # B/s per link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+# per-arch parameter counts (N) and active params (MoE) for MODEL_FLOPS
+N_PARAMS = {
+    "grok-1-314b": (314e9, 86e9),  # total, active (top-2 of 8 + attn)
+    "granite-moe-1b-a400m": (1.4e9, 0.4e9),
+    "qwen1.5-32b": (32.5e9, 32.5e9),
+    "codeqwen1.5-7b": (7.3e9, 7.3e9),
+    "gemma2-9b": (9.2e9, 9.2e9),
+}
+
+TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def model_flops_per_chip(arch: str, shape: str, n_chips: int,
+                         is_train: bool) -> float | None:
+    if arch not in N_PARAMS:
+        return None
+    _, active = N_PARAMS[arch]
+    toks = TOKENS.get(shape)
+    if toks is None:
+        return None
+    mult = 6.0 if is_train else 2.0
+    return mult * active * toks / n_chips
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    n_chips = 1
+    for v in rec["mesh_shape"].values():
+        n_chips *= v
+    # loop-aware HLO accounting (XLA cost_analysis counts scan bodies once —
+    # see launch/hlo_analysis.py); fall back to cost_analysis for old recs
+    la = rec.get("loop_aware") or {}
+    flops = la.get("dot_flops") or rec["cost"]["flops"]
+    byts = la.get("hbm_bytes") or rec["cost"]["bytes_accessed"]
+    coll = rec["collectives"]["total_bytes"]
+    t_c = flops / PEAK
+    t_m = byts / HBM
+    t_x = coll / ICI
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    arch, shape = rec["cell"].split("__")
+    is_train = "train" in rec.get("note", "")
+    mf = model_flops_per_chip(arch, shape, n_chips, is_train)
+    return {
+        "cell": rec["cell"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "step_s": max(t_c, t_m, t_x),
+        "model_flops": mf,
+        "useful_ratio": (mf / flops) if (mf and flops) else None,
+        "peak_gb": (rec["memory"]["peak_bytes"] or 0) / 1e9,
+        "arg_gb": (rec["memory"]["argument_bytes"] or 0) / 1e9,
+        "roofline_frac": (
+            max(t_c, t_m, t_x) and t_c / max(t_c, t_m, t_x)),
+    }
+
+
+def table(mesh: str = "single") -> str:
+    rows = []
+    header = ("| cell | compute s | memory s | collective s | dominant | "
+              "useful/HLO | peak GB |")
+    sep = "|---|---|---|---|---|---|---|"
+    lines = [header, sep]
+    for rec in load_cells(mesh):
+        if rec.get("status") == "skipped":
+            lines.append(f"| {rec['cell']} | — | — | — | SKIP: "
+                         f"{rec['skip_reason'][:40]}... | — | — |")
+            continue
+        a = analyze(rec)
+        if a is None:
+            lines.append(f"| {rec['cell']} | ERROR | | | | | |")
+            continue
+        ur = f"{a['useful_ratio']:.2f}" if a["useful_ratio"] else "n/a"
+        lines.append(
+            f"| {a['cell']} | {a['compute_s']:.2e} | {a['memory_s']:.2e} | "
+            f"{a['collective_s']:.2e} | {a['dominant']} | {ur} | "
+            f"{a['peak_gb']:.2f} |")
+    return "\n".join(lines)
+
+
+def run() -> dict:
+    from .common import emit
+    out = {}
+    for rec in load_cells("single"):
+        a = analyze(rec)
+        if a is None:
+            continue
+        emit(f"roofline/{a['cell']}", a["step_s"] * 1e6,
+             f"dom={a['dominant']};c={a['compute_s']:.2e};"
+             f"m={a['memory_s']:.2e};x={a['collective_s']:.2e}")
+        out[a["cell"]] = a
+    return out
+
+
+if __name__ == "__main__":
+    print(table("single"))

@@ -1,0 +1,38 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Pass module names to run a
+subset: ``python -m benchmarks.run fig6 fig18``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    import jax
+    jax.config.update("jax_platform_name", "cpu")
+
+    from . import (fig5_preproc_fraction, fig6_breakdown,
+                   fig10_serialization, fig18_end2end, fig22_reconfig,
+                   fig24_costmodel, fig25_sensitivity, roofline)
+    suites = {
+        "fig5": fig5_preproc_fraction.run,
+        "fig6": fig6_breakdown.run,
+        "fig10": fig10_serialization.run,
+        "fig18": fig18_end2end.run,
+        "fig22": fig22_reconfig.run,
+        "fig24": fig24_costmodel.run,
+        "fig25": fig25_sensitivity.run,
+        "roofline": roofline.run,
+    }
+    wanted = [a for a in sys.argv[1:] if a in suites] or list(suites)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        try:
+            suites[name]()
+        except Exception as e:  # noqa: BLE001 — a suite failing is a result
+            print(f"{name}/SUITE_ERROR,0,{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end driver: train GraphSAGE with the AutoGNN sampler in the loop.
+
+    PYTHONPATH=src python examples/train_graphsage_reddit.py [--full]
+
+Default runs a reduced Reddit-class graph on CPU (a few hundred steps of a
+~100K-param model); --full uses the assigned reddit scale (232,965 nodes /
+114.6M edges, fanout 15-10, batch 1024) for real hardware. The batch_fn is
+the paper's entire preprocessing pipeline, jitted, with the engine chosen by
+the DynPre cost model; the loop checkpoints and can resume after a crash.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.train import run_gnn
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/example_graphsage_ckpt")
+    args = ap.parse_args()
+    params, opt, history = run_gnn(
+        "graphsage-reddit", steps=args.steps, smoke=not args.full,
+        ckpt_dir=args.ckpt_dir, fail_at=None)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"steps={args.steps} loss {first:.4f} -> {last:.4f}")
+    assert last < first, "training should reduce the loss"
+    print("OK")

@@ -1,0 +1,7 @@
+"""repro — AutoGNN on TPU: a multi-pod JAX framework.
+
+Subpackages: core (the paper's technique), kernels (Pallas TPU), models,
+dist, train, data, configs, launch. See README.md / DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+from .base import (ARCHS, ArchSpec, GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
+                   all_cells, get_arch, get_config)
+
+__all__ = ["ARCHS", "ArchSpec", "GNN_SHAPES", "LM_SHAPES", "RECSYS_SHAPES",
+           "all_cells", "get_arch", "get_config"]

@@ -1,0 +1,14 @@
+"""gatedgcn [arXiv:2003.00982; paper]: 16L d_hidden=70, gated aggregator."""
+from repro.models.gnn import GNNConfig
+
+
+def config() -> GNNConfig:
+    return GNNConfig(
+        name="gatedgcn", kind="gatedgcn", n_layers=16, d_hidden=70,
+        aggregator="gated")
+
+
+def smoke_config() -> GNNConfig:
+    return GNNConfig(
+        name="gatedgcn-smoke", kind="gatedgcn", n_layers=3, d_hidden=8,
+        aggregator="gated")

@@ -1,0 +1,15 @@
+"""graphsage-reddit [arXiv:1706.02216; paper]: 2L d128 mean aggregator,
+sample sizes 25-10 — the paper's own evaluation model (2-layer GraphSAGE)."""
+from repro.models.gnn import GNNConfig
+
+
+def config() -> GNNConfig:
+    return GNNConfig(
+        name="graphsage-reddit", kind="graphsage", n_layers=2, d_hidden=128,
+        aggregator="mean", sample_sizes=(25, 10))
+
+
+def smoke_config() -> GNNConfig:
+    return GNNConfig(
+        name="graphsage-smoke", kind="graphsage", n_layers=2, d_hidden=16,
+        aggregator="mean", sample_sizes=(3, 2))

@@ -1,0 +1,33 @@
+"""AutoGNN core: hardware-driven GNN preprocessing, reimplemented for TPU.
+
+The paper's contribution as composable JAX modules:
+
+* set_partition — UPE primitive (prefix-sum + relocation)
+* set_count     — SCR primitive (compare + adder/filter tree)
+* ordering      — edge Ordering (chunked radix sort + parallel merge)
+* reshaping     — data Reshaping (CSC pointer array via set-counting)
+* sampling      — uni-random Selecting (Floyd / keysort / reservoir)
+* reindexing    — subgraph Reindexing (sort-unique-rank, no hash map)
+* pipeline      — the end-to-end jitted workflow (paper Fig. 14)
+* costmodel     — Table-I analytic model + configuration library
+* reconfig      — AutoPre / StatPre / DynPre execution modes
+"""
+from .graph import COO, CSC, SENTINEL, Subgraph, next_pow2, pad_to, random_coo
+from .set_partition import (displacement, partition_indices, radix_partition,
+                            radix_sort_by_key, set_partition)
+from .set_count import (count_equal, count_less_than, filter_lookup,
+                        searchsorted_oracle)
+from .ordering import edge_ordering, edge_ordering_xla, merge_sorted, \
+    stable_sort_by_key
+from .reshaping import (build_pointer_array, build_pointer_array_serial,
+                        data_reshaping, graph_convert)
+from .sampling import sample_khop, select_floyd, select_keysort, \
+    select_reservoir
+from .reindexing import ReindexMap, build_reindex_map, reindex_edges
+from .pipeline import (convert, convert_xla, gather_features, preprocess,
+                       preprocess_xla_baseline, sample_subgraph)
+from .costmodel import (Calibration, EngineConfig, Workload, best_config,
+                        bitstream_library, estimate_seconds)
+from .reconfig import DynPre, Engine, autopre, statpre
+
+__all__ = [k for k in dir() if not k.startswith("_")]

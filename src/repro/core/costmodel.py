@@ -1,0 +1,137 @@
+"""Cost model (paper §V-B, Table I), TPU-recalibrated.
+
+The paper's closed forms, verbatim:
+
+  Ordering:   m = log2(e / w_upe) - 1
+              cycles = 2 * m * e / (n_upe * w_upe)
+  Selecting:  s = b * k^(l+1) - 1
+              cycles = s / n_upe
+  Reshaping:  cycles = max(n / n_scr, e / w_scr)
+
+On TPU the "hardware configuration" is an EngineConfig (chunk width = UPE
+width, lane count = UPE count analog via map batch, count tile = SCR width,
+target blocks = SCR slot count). Cycle counts convert to seconds through
+per-primitive throughput constants calibrated by benchmarks/fig24_costmodel.py
+(`calibrate()` measures them; defaults are CPU-measured fallbacks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """The reconfigurable knobs — the bitstream parameter analog.
+
+    w_upe: radix-sort chunk width (elements sorted fully in VMEM)
+    n_upe: parallel sort lanes (chunks processed concurrently)
+    w_scr: set-count element-block width (COO elements compared per pass)
+    n_scr: set-count target-block height (pointer entries produced per pass)
+    selection: selector algorithm
+    """
+
+    w_upe: int = 4096
+    n_upe: int = 8
+    w_scr: int = 2048
+    n_scr: int = 256
+    selection: str = "floyd"
+    use_pallas: bool = False
+
+    @property
+    def key(self) -> str:
+        return (f"u{self.n_upe}x{self.w_upe}_s{self.n_scr}x{self.w_scr}"
+                f"_{self.selection}{'_pl' if self.use_pallas else ''}")
+
+
+# Resource budget analog of the paper's 70:30 UPE:SCR split: the product of
+# width × lanes is bounded (VMEM footprint stands in for LUT count).
+UPE_BUDGET = 4096 * 64
+SCR_BUDGET = 2048 * 2048
+
+
+def bitstream_library() -> list[EngineConfig]:
+    """Pre-compiled configuration library (paper: ten UPE × ten SCR variants).
+
+    Start from one wide engine and iteratively halve width / double count,
+    exactly the paper's generation rule.
+    """
+    out = []
+    w_upe, n_upe = 65536, 4
+    upes = []
+    while w_upe >= 256:
+        upes.append((w_upe, n_upe))
+        w_upe //= 2
+        n_upe *= 2
+    w_scr, n_scr = 65536, 64
+    scrs = []
+    while w_scr >= 256:
+        scrs.append((w_scr, n_scr))
+        w_scr //= 2
+        n_scr *= 2
+    for wu, nu in upes:
+        for ws, ns in scrs:
+            out.append(EngineConfig(w_upe=wu, n_upe=nu, w_scr=ws, n_scr=ns))
+    return out
+
+
+@dataclasses.dataclass
+class Calibration:
+    """Per-primitive throughput (elements/sec per unit engine)."""
+
+    upe_elems_per_s: float = 2.0e8  # per lane, per merge round
+    scr_cmps_per_s: float = 5.0e9  # comparisons/sec (tile compare-reduce)
+    sel_nodes_per_s: float = 5.0e6  # Floyd draws/sec per lane
+    reidx_elems_per_s: float = 1.0e8
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    n: int  # nodes
+    e: int  # edges
+    l: int = 2  # GNN layers
+    k: int = 10  # fanout
+    b: int = 1024  # batch nodes
+
+
+def ordering_cycles(cfg: EngineConfig, w: Workload) -> float:
+    m = max(1.0, math.log2(max(2.0, w.e / cfg.w_upe)) - 1)
+    return 2.0 * m * w.e / (cfg.n_upe * cfg.w_upe)
+
+
+def selecting_cycles(cfg: EngineConfig, w: Workload) -> float:
+    s = w.b * (w.k ** (w.l + 1)) - 1
+    return s / cfg.n_upe
+
+
+def reshaping_cycles(cfg: EngineConfig, w: Workload) -> float:
+    return max(w.n / cfg.n_scr, w.e / cfg.w_scr)
+
+
+def estimate_seconds(cfg: EngineConfig, w: Workload,
+                     cal: Calibration | None = None) -> dict[str, float]:
+    """Cycle model → seconds via calibrated throughputs."""
+    cal = cal or Calibration()
+    m = max(1.0, math.log2(max(2.0, w.e / cfg.w_upe)) - 1)
+    t_order = (m * w.e) / (cal.upe_elems_per_s * cfg.n_upe)
+    s = w.b * (w.k ** (w.l + 1)) - 1
+    t_select = s / (cal.sel_nodes_per_s * cfg.n_upe)
+    cmp_total = max(w.n * cfg.w_scr, w.e * cfg.n_scr)  # tile coverage
+    t_reshape = max(w.n / cfg.n_scr, w.e / cfg.w_scr) * (
+        cfg.n_scr * cfg.w_scr / cal.scr_cmps_per_s)
+    del cmp_total
+    t_reindex = (w.b * (w.k ** w.l) * (w.l + 1)) / cal.reidx_elems_per_s
+    return {
+        "ordering": t_order,
+        "selecting": t_select,
+        "reshaping": t_reshape,
+        "reindexing": t_reindex,
+        "total": t_order + t_select + t_reshape + t_reindex,
+    }
+
+
+def best_config(w: Workload, library: list[EngineConfig] | None = None,
+                cal: Calibration | None = None) -> EngineConfig:
+    """DynPre's decision: score every pre-compiled config, pick the min."""
+    lib = library or bitstream_library()
+    return min(lib, key=lambda c: estimate_seconds(c, w, cal)["total"])

@@ -1,0 +1,136 @@
+"""Graph containers and padding conventions.
+
+AutoGNN streams variable-length COO through fixed-width hardware; the TPU
+equivalent is padded, power-of-two buffers with an explicit validity count.
+Sentinel VID ``SENTINEL`` sorts after every real VID, so padded tails stay at
+the end of every Ordering / Reshaping stage without special-casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Largest int32; sorts after every valid VID. Matches the paper's 32-bit VIDs.
+SENTINEL = jnp.int32(0x7FFFFFFF)
+SENTINEL_I = int(0x7FFFFFFF)
+
+
+def next_pow2(n: int) -> int:
+    n = int(n)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def pad_to(x: jnp.ndarray, size: int, fill) -> jnp.ndarray:
+    """Pad 1-D array to ``size`` with ``fill`` (no-op if already there)."""
+    n = x.shape[0]
+    if n == size:
+        return x
+    if n > size:
+        raise ValueError(f"cannot pad {n} down to {size}")
+    return jnp.concatenate([x, jnp.full((size - n,), fill, dtype=x.dtype)])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class COO:
+    """Edge array: (dst, src) pairs, padded to static length with SENTINEL.
+
+    ``n_edges`` is the number of valid leading entries *after* any compaction;
+    before Ordering the valid edges may sit anywhere (the sort compacts them).
+    """
+
+    dst: jnp.ndarray  # int32 [E_pad]
+    src: jnp.ndarray  # int32 [E_pad]
+    n_edges: jnp.ndarray  # int32 scalar — valid edge count
+    n_nodes: int  # static — VID space size
+
+    def tree_flatten(self):
+        return (self.dst, self.src, self.n_edges), (self.n_nodes,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n_nodes=aux[0])
+
+    @property
+    def capacity(self) -> int:
+        return self.dst.shape[0]
+
+    @staticmethod
+    def from_arrays(dst, src, n_nodes: int, capacity: int | None = None) -> "COO":
+        dst = jnp.asarray(dst, jnp.int32)
+        src = jnp.asarray(src, jnp.int32)
+        e = dst.shape[0]
+        cap = capacity or next_pow2(e)
+        return COO(
+            dst=pad_to(dst, cap, SENTINEL),
+            src=pad_to(src, cap, SENTINEL),
+            n_edges=jnp.int32(e),
+            n_nodes=n_nodes,
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CSC:
+    """Compressed sparse column: pointers indexed by dst VID, indices = src VIDs.
+
+    ``ptr`` has length n_nodes+1 (padded to ``ptr_capacity``); ``idx`` is the
+    src array of the dst-sorted COO (padded with SENTINEL).
+    """
+
+    ptr: jnp.ndarray  # int32 [n_nodes + 1 padded]
+    idx: jnp.ndarray  # int32 [E_pad]
+    n_edges: jnp.ndarray  # int32 scalar
+    n_nodes: int
+
+    def tree_flatten(self):
+        return (self.ptr, self.idx, self.n_edges), (self.n_nodes,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n_nodes=aux[0])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Subgraph:
+    """Sampled subgraph in CSC form with the reindex map back to original VIDs.
+
+    ``order`` lists original VIDs for each new VID (new VID = position);
+    padded with SENTINEL. ``n_sub_nodes`` counts valid entries.
+    """
+
+    csc: CSC
+    order: jnp.ndarray  # int32 [N_sub_pad] original VID per new VID
+    n_sub_nodes: jnp.ndarray  # int32 scalar
+
+    def tree_flatten(self):
+        return (self.csc, self.order, self.n_sub_nodes), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# ----------------------------------------------------------------------------
+# Host-side synthetic graph generators (data substrate; numpy, not traced).
+# ----------------------------------------------------------------------------
+
+def random_coo(rng: np.random.Generator, n_nodes: int, n_edges: int,
+               power_law: float | None = 1.5) -> tuple[np.ndarray, np.ndarray]:
+    """Random COO with optional power-law dst-degree skew (real graphs are skewed)."""
+    if power_law:
+        # Zipf-ish: dst probability ∝ rank^-alpha over a shuffled node order.
+        ranks = np.arange(1, n_nodes + 1, dtype=np.float64)
+        p = ranks ** (-power_law)
+        p /= p.sum()
+        perm = rng.permutation(n_nodes)
+        dst = perm[rng.choice(n_nodes, size=n_edges, p=p)]
+    else:
+        dst = rng.integers(0, n_nodes, size=n_edges)
+    src = rng.integers(0, n_nodes, size=n_edges)
+    return dst.astype(np.int32), src.astype(np.int32)

@@ -1,0 +1,113 @@
+"""End-to-end AutoGNN preprocessing pipeline (paper Fig. 14).
+
+COO → [Ordering] → sorted COO → [Reshaping] → CSC → [Selecting] → sampled
+nodes/edges → [Reindexing] → sampled Subgraph (itself converted to CSC by a
+second Ordering + Reshaping pass, exactly as the paper's dataflow does).
+
+Everything is a single jittable function of static shapes so the whole
+preprocessing workflow is one XLA program — the TPU analog of "fully
+automated in hardware, removing preprocessing from the critical path".
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .graph import COO, CSC, SENTINEL, Subgraph, next_pow2
+from .ordering import edge_ordering, edge_ordering_xla
+from .reshaping import data_reshaping, build_pointer_array
+from .sampling import sample_khop
+from .reindexing import build_reindex_map, reindex_edges
+from .costmodel import EngineConfig
+
+
+def convert(coo: COO, cfg: EngineConfig | None = None,
+            count_fn=None, chunk_sort_fn=None) -> CSC:
+    """Graph conversion: Ordering + Reshaping under an engine config.
+
+    ``cfg.use_pallas`` routes the chunk sort through the UPE Pallas kernel
+    and the pointer build through the SCR Pallas kernel (interpret mode on
+    CPU; Mosaic on TPU). Explicit ``count_fn``/``chunk_sort_fn`` override.
+    """
+    cfg = cfg or EngineConfig()
+    if cfg.use_pallas:
+        from repro.kernels import ops as _kops
+        chunk_sort_fn = chunk_sort_fn or _kops.pallas_chunk_sort_fn
+        count_fn = count_fn or _kops.pallas_count_fn
+    sorted_coo = edge_ordering(coo, chunk=min(cfg.w_upe, coo.capacity),
+                               map_batch=cfg.n_upe,
+                               chunk_sort_fn=chunk_sort_fn)
+    return data_reshaping(sorted_coo, count_fn=count_fn)
+
+
+def convert_xla(coo: COO) -> CSC:
+    """Baseline conversion: XLA comparison sort + searchsorted."""
+    sorted_coo = edge_ordering_xla(coo)
+    ptr = jnp.searchsorted(
+        sorted_coo.dst, jnp.arange(coo.n_nodes + 1, dtype=jnp.int32),
+        side="left", method="sort").astype(jnp.int32)
+    return CSC(ptr=ptr, idx=sorted_coo.src, n_edges=coo.n_edges,
+               n_nodes=coo.n_nodes)
+
+
+def sample_subgraph(csc: CSC, batch_nodes: jnp.ndarray,
+                    fanouts: tuple[int, ...], key: jax.Array,
+                    cfg: EngineConfig | None = None,
+                    count_fn=None, chunk_sort_fn=None) -> Subgraph:
+    """Selecting + Reindexing + subgraph conversion → sampled CSC subgraph."""
+    cfg = cfg or EngineConfig()
+    nodes, e_dst, e_src = sample_khop(
+        csc, batch_nodes, fanouts, key, selection=cfg.selection)
+    n_cap = nodes.shape[0]
+    rmap = build_reindex_map(nodes)
+    sub_coo_raw = reindex_edges(rmap, e_dst, e_src, n_nodes_cap=n_cap)
+    # pad edge buffers to pow2 for the chunked sorter
+    e_cap = next_pow2(sub_coo_raw.dst.shape[0])
+    sub_coo = COO(
+        dst=jnp.pad(sub_coo_raw.dst, (0, e_cap - sub_coo_raw.dst.shape[0]),
+                    constant_values=int(SENTINEL)),
+        src=jnp.pad(sub_coo_raw.src, (0, e_cap - sub_coo_raw.src.shape[0]),
+                    constant_values=int(SENTINEL)),
+        n_edges=sub_coo_raw.n_edges, n_nodes=n_cap)
+    sub_sorted = edge_ordering(sub_coo, chunk=min(cfg.w_upe, e_cap),
+                               chunk_sort_fn=chunk_sort_fn)
+    sub_csc = data_reshaping(sub_sorted, count_fn=count_fn)
+    return Subgraph(csc=sub_csc, order=rmap.order, n_sub_nodes=rmap.n_unique)
+
+
+@partial(jax.jit, static_argnames=("fanouts", "cfg"))
+def preprocess(coo: COO, batch_nodes: jnp.ndarray, fanouts: tuple[int, ...],
+               key: jax.Array, cfg: EngineConfig = EngineConfig()
+               ) -> Subgraph:
+    """The full AutoGNN workflow as one XLA program (paper Fig. 14)."""
+    csc = convert(coo, cfg)
+    return sample_subgraph(csc, batch_nodes, fanouts, key, cfg)
+
+
+@partial(jax.jit, static_argnames=("fanouts",))
+def preprocess_xla_baseline(coo: COO, batch_nodes: jnp.ndarray,
+                            fanouts: tuple[int, ...], key: jax.Array
+                            ) -> Subgraph:
+    """GPU-baseline analog: comparison sorts + searchsorted throughout."""
+    csc = convert_xla(coo)
+    nodes, e_dst, e_src = sample_khop(csc, batch_nodes, fanouts, key,
+                                      selection="keysort")
+    n_cap = nodes.shape[0]
+    rmap = build_reindex_map(nodes)
+    sub_coo = reindex_edges(rmap, e_dst, e_src, n_nodes_cap=n_cap)
+    order = jnp.lexsort((sub_coo.src, sub_coo.dst))
+    sd, ss = sub_coo.dst[order], sub_coo.src[order]
+    ptr = jnp.searchsorted(sd, jnp.arange(n_cap + 1, dtype=jnp.int32),
+                           side="left", method="sort").astype(jnp.int32)
+    sub_csc = CSC(ptr=ptr, idx=ss, n_edges=sub_coo.n_edges, n_nodes=n_cap)
+    return Subgraph(csc=sub_csc, order=rmap.order, n_sub_nodes=rmap.n_unique)
+
+
+def gather_features(sub: Subgraph, features: jnp.ndarray) -> jnp.ndarray:
+    """Embedding-table extraction for the sampled subgraph (paper Fig. 4b)."""
+    safe = jnp.clip(sub.order, 0, features.shape[0] - 1)
+    rows = jnp.take(features, safe, axis=0)
+    valid = (sub.order != SENTINEL)[:, None]
+    return jnp.where(valid, rows, 0)

@@ -1,0 +1,122 @@
+"""Execution modes and dynamic reconfiguration (paper §V-B, §VI).
+
+The paper's three system variants map onto engine management policies:
+
+* ``AutoPre``  — the UPE region is statically split into an ordering-only and
+  a selection-only engine (half "resources" each; here: half lanes each).
+* ``StatPre``  — one time-multiplexed engine with a fixed configuration
+  (tuned for an intermediate graph, as the paper tunes for MV).
+* ``DynPre``   — StatPre + runtime reconfiguration: graph statistics are
+  profiled, the Table-I cost model scores the pre-compiled library, and the
+  engine switches configuration when the predicted gain exceeds the
+  reconfiguration cost.
+
+On TPU, "reprogramming a bitstream" = switching to a different pre-jitted
+executable. The first call per config pays XLA compilation (the analog of the
+paper's offline Vivado synthesis); subsequent switches hit the jit cache
+(the analog of bitstreams staged in DRAM, ~230 ms → ~0 here). We model the
+paper's reconfiguration latency explicitly so benchmarks can reproduce the
+Fig. 28 trade-off.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+
+from .costmodel import (Calibration, EngineConfig, Workload, best_config,
+                        bitstream_library, estimate_seconds)
+
+# Paper: 230 ms full reconfig; halved when only one region changes.
+RECONFIG_S_FULL = 0.230
+RECONFIG_S_PARTIAL = 0.115
+
+
+@dataclasses.dataclass
+class ReconfigDecision:
+    reconfigure: bool
+    config: EngineConfig
+    predicted_gain_s: float
+    reconfig_cost_s: float
+
+
+class Engine:
+    """A preprocessing engine bound to one EngineConfig.
+
+    ``fns`` maps stage name → jitted callable; building an Engine is the
+    "bitstream load". The jit cache persists across engines, so re-creating
+    an engine with a previously used config is free (paper: bitstreams staged
+    in device DRAM).
+    """
+
+    def __init__(self, cfg: EngineConfig, fanouts: tuple[int, ...]):
+        from . import pipeline  # late import to avoid cycles
+        self.cfg = cfg
+        self.fanouts = fanouts
+        self._preprocess = jax.jit(
+            pipeline.preprocess, static_argnames=("fanouts", "cfg"))
+
+    def preprocess(self, coo, batch_nodes, key):
+        return self._preprocess(coo, batch_nodes, self.fanouts, key, self.cfg)
+
+
+class DynPre:
+    """Dynamic reconfiguration controller."""
+
+    def __init__(self, fanouts: tuple[int, ...],
+                 library: list[EngineConfig] | None = None,
+                 cal: Calibration | None = None,
+                 switch_threshold: float = 1.5,
+                 reconfig_cost_s: float = RECONFIG_S_PARTIAL):
+        self.library = library or bitstream_library()
+        self.cal = cal or Calibration()
+        self.fanouts = fanouts
+        self.threshold = switch_threshold
+        self.reconfig_cost_s = reconfig_cost_s
+        self.engine: Engine | None = None
+        self.n_reconfigs = 0
+
+    def profile(self, coo, batch_size: int) -> Workload:
+        """Light-weight graph metadata capture (paper: <0.1 ms host-side)."""
+        return Workload(n=coo.n_nodes, e=int(coo.n_edges), l=len(self.fanouts),
+                        k=max(self.fanouts), b=batch_size)
+
+    def decide(self, w: Workload) -> ReconfigDecision:
+        cand = best_config(w, self.library, self.cal)
+        if self.engine is None:
+            return ReconfigDecision(True, cand, float("inf"),
+                                    self.reconfig_cost_s)
+        cur = estimate_seconds(self.engine.cfg, w, self.cal)["total"]
+        new = estimate_seconds(cand, w, self.cal)["total"]
+        gain = cur - new
+        # switch when predicted gain amortizes the reconfiguration cost
+        go = cur > new * self.threshold and gain > self.reconfig_cost_s * 0.1
+        return ReconfigDecision(go, cand, gain, self.reconfig_cost_s)
+
+    def ensure(self, coo, batch_size: int) -> Engine:
+        d = self.decide(self.profile(coo, batch_size))
+        if d.reconfigure or self.engine is None:
+            self.engine = Engine(d.config, self.fanouts)
+            self.n_reconfigs += 1
+        return self.engine
+
+    def preprocess(self, coo, batch_nodes, key):
+        eng = self.ensure(coo, int(batch_nodes.shape[0]))
+        return eng.preprocess(coo, batch_nodes, key)
+
+
+def statpre(fanouts: tuple[int, ...],
+            cfg: EngineConfig | None = None) -> Engine:
+    """StatPre: fixed intermediate-graph tuning (paper: tuned for MV)."""
+    return Engine(cfg or EngineConfig(w_upe=4096, n_upe=16,
+                                      w_scr=2048, n_scr=512), fanouts)
+
+
+def autopre(fanouts: tuple[int, ...]) -> Engine:
+    """AutoPre: statically split lanes (half for ordering, half for
+    selection). In the cycle model this halves n_upe for each stage; the
+    executable is the same program with a half-lane config."""
+    return Engine(EngineConfig(w_upe=4096, n_upe=8, w_scr=2048, n_scr=512),
+                  fanouts)

@@ -1,0 +1,104 @@
+"""Subgraph Reindexing (paper §II-B Fig. 4b, §IV-A Fig. 9b).
+
+Map sampled original VIDs to compact new VIDs without a hash map: sort the
+collected vertex list, compact first occurrences (set-partitioning), and
+resolve lookups by rank (set-counting over the sorted uniques — the SCR's
+filter-tree query). New VIDs are assigned in first-occurrence order, matching
+the paper's counter-based numbering; a ``sorted`` order is also available.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .graph import COO, SENTINEL
+from .set_partition import set_partition
+from .set_count import filter_lookup  # noqa: F401  (SCR-path equivalence tests)
+
+
+class ReindexMap:
+    """Static-shape reindex mapping.
+
+    Attributes (all padded to ``capacity`` = len(vid list)):
+      sorted_vids: unique original VIDs ascending (SENTINEL tail)
+      rank_to_new: new VID for each rank in ``sorted_vids``
+      order:       original VID for each new VID (the Subgraph order array)
+      n_unique:    valid count
+    """
+
+    def __init__(self, sorted_vids, rank_to_new, order, n_unique):
+        self.sorted_vids = sorted_vids
+        self.rank_to_new = rank_to_new
+        self.order = order
+        self.n_unique = n_unique
+
+    def lookup(self, vids: jnp.ndarray) -> jnp.ndarray:
+        """Original VIDs → new VIDs (SENTINEL where not in the map).
+
+        rank = set-count(sorted_vids < vid); hit test = one comparator.
+        """
+        from .set_count import rank_in_sorted
+        rank = rank_in_sorted(self.sorted_vids, vids, side="left")
+        rank_c = jnp.clip(rank, 0, self.sorted_vids.shape[0] - 1)
+        hit = self.sorted_vids[rank_c] == vids
+        new = self.rank_to_new[rank_c]
+        return jnp.where(hit & (vids != SENTINEL), new, SENTINEL)
+
+
+def build_reindex_map(vids: jnp.ndarray, numbering: str = "first_occurrence"
+                      ) -> ReindexMap:
+    """Build the mapping from a (duplicated, SENTINEL-padded) VID list."""
+    n = vids.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    # stable sort by vid keeps positions ascending inside each run
+    order_ix = jnp.argsort(vids, stable=True)
+    sv = vids[order_ix]
+    sp = pos[order_ix]
+    valid = sv != SENTINEL
+    is_first = valid & jnp.concatenate(
+        [jnp.ones((1,), bool), sv[1:] != sv[:-1]])
+    # compact (vid, first_pos) pairs with the UPE set-partition
+    packed = jnp.stack([sv, sp], axis=1)
+    compacted, n_unique = set_partition(packed, is_first)
+    uniq_vids = jnp.where(jnp.arange(n) < n_unique, compacted[:, 0], SENTINEL)
+    first_pos = jnp.where(jnp.arange(n) < n_unique, compacted[:, 1],
+                          jnp.int32(0x7FFFFFFF))
+    if numbering == "first_occurrence":
+        # new VID = rank of first occurrence position
+        perm = jnp.argsort(first_pos)  # new_id -> rank
+        order = jnp.where(perm < n_unique, uniq_vids[perm], SENTINEL)
+        rank_to_new = jnp.zeros((n,), jnp.int32).at[perm].set(
+            jnp.arange(n, dtype=jnp.int32))
+    elif numbering == "sorted":
+        order = uniq_vids
+        rank_to_new = jnp.arange(n, dtype=jnp.int32)
+    else:
+        raise ValueError(numbering)
+    return ReindexMap(uniq_vids, rank_to_new, order, n_unique)
+
+
+def reindex_edges(rmap: ReindexMap, edge_dst: jnp.ndarray,
+                  edge_src: jnp.ndarray, n_nodes_cap: int) -> COO:
+    """Renumber edge endpoints; invalid (sentinel-child) edges stay SENTINEL."""
+    nd = rmap.lookup(edge_dst)
+    ns = rmap.lookup(edge_src)
+    bad = (nd == SENTINEL) | (ns == SENTINEL)
+    nd = jnp.where(bad, SENTINEL, nd)
+    ns = jnp.where(bad, SENTINEL, ns)
+    n_edges = jnp.sum(~bad).astype(jnp.int32)
+    return COO(dst=nd, src=ns, n_edges=n_edges, n_nodes=n_nodes_cap)
+
+
+def reindex_serial_oracle(vids) -> tuple:
+    """Hash-map style sequential numbering (numpy oracle for tests)."""
+    import numpy as np
+    seen: dict[int, int] = {}
+    order = []
+    for v in np.asarray(vids):
+        v = int(v)
+        if v == int(SENTINEL):
+            continue
+        if v not in seen:
+            seen[v] = len(order)
+            order.append(v)
+    return seen, order

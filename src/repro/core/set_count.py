@@ -1,0 +1,126 @@
+"""Set-counting — the SCR primitive (paper §IV-A, Fig. 9, Fig. 13).
+
+Count, for each target, how many elements of a set satisfy a condition
+(``element < target`` for Reshaping; ``element == target`` for Reindexing).
+The FPGA does all comparisons in parallel and reduces through an adder tree
+(Reshaper) or an OR/filter tree (Reindexer) in one cycle. On TPU a tile of
+(targets × elements) comparisons reduced along lanes is the same tree,
+executed by the VPU; kernels/set_count.py tiles it through VMEM.
+
+All functions here are O(T·E) compare-reduce formulations — *no* sequential
+scan, no hash map, no atomics — exactly the paper's redesign.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def count_less_than(sorted_or_not: jnp.ndarray, targets: jnp.ndarray,
+                    block: int = 2048) -> jnp.ndarray:
+    """counts[t] = |{x in set : x < targets[t]}| via blocked compare-reduce.
+
+    Works on unsorted input (the adder tree does not need sorted data); when
+    the input *is* sorted this equals ``searchsorted(..., side='left')``,
+    which tests exploit as an oracle.
+    """
+    e = sorted_or_not.shape[0]
+    pad = (-e) % block
+    xs = jnp.pad(sorted_or_not, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    xs = xs.reshape(-1, block)
+
+    def body(acc, chunk):
+        # [T, block] compare matrix → row-sum = adder tree over the chunk
+        acc = acc + jnp.sum(
+            (chunk[None, :] < targets[:, None]).astype(jnp.int32), axis=1)
+        return acc, None
+
+    init = jnp.zeros(targets.shape, jnp.int32)
+    out, _ = jax.lax.scan(body, init, xs)
+    return out
+
+
+def count_equal(values: jnp.ndarray, targets: jnp.ndarray,
+                block: int = 2048) -> jnp.ndarray:
+    """counts[t] = |{x : x == targets[t]}| — SCR with equality comparators."""
+    e = values.shape[0]
+    pad = (-e) % block
+    xs = jnp.pad(values, (0, pad), constant_values=jnp.iinfo(jnp.int32).min)
+    xs = xs.reshape(-1, block)
+
+    def body(acc, chunk):
+        acc = acc + jnp.sum(
+            (chunk[None, :] == targets[:, None]).astype(jnp.int32), axis=1)
+        return acc, None
+
+    out, _ = jax.lax.scan(body, jnp.zeros(targets.shape, jnp.int32), xs)
+    return out
+
+
+def filter_lookup(keys: jnp.ndarray, payloads: jnp.ndarray,
+                  targets: jnp.ndarray, not_found: int = -1,
+                  block: int = 2048) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The Reindexer's filter(OR)-tree: for each target, find its payload.
+
+    Returns (payload_or_not_found [T], hit [T] bool). Assumes keys are unique
+    (the mapping table keyed by original VID). The OR tree reduces
+    ``hit_mask * (payload+1)`` — a max works identically since at most one
+    comparator fires per target.
+    """
+    e = keys.shape[0]
+    pad = (-e) % block
+    ks = jnp.pad(keys, (0, pad), constant_values=jnp.iinfo(jnp.int32).min)
+    ps = jnp.pad(payloads, (0, pad), constant_values=0)
+    ks = ks.reshape(-1, block)
+    ps = ps.reshape(-1, block)
+
+    def body(acc, chunk):
+        k, p = chunk
+        hit = (k[None, :] == targets[:, None])  # [T, block]
+        # OR-tree: encode payload+1 so 0 means "no hit in this chunk"
+        enc = jnp.max(jnp.where(hit, p[None, :] + 1, 0), axis=1)
+        acc = jnp.maximum(acc, enc)
+        return acc, None
+
+    enc0 = jnp.zeros(targets.shape, jnp.int32)
+    enc, _ = jax.lax.scan(body, enc0, (ks, ps))
+    hit = enc > 0
+    return jnp.where(hit, enc - 1, not_found), hit
+
+
+def searchsorted_oracle(sorted_arr: jnp.ndarray, targets: jnp.ndarray,
+                        side: str = "left") -> jnp.ndarray:
+    """Binary-search oracle used by tests to validate the compare-reduce path."""
+    return jnp.searchsorted(sorted_arr, targets, side=side).astype(jnp.int32)
+
+
+def rank_in_sorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray,
+                   side: str = "left") -> jnp.ndarray:
+    """Parallel batched binary search: log₂(n) rounds of compare+gather,
+    every query independent (shardable over the query axis).
+
+    Replaces jnp.searchsorted in hot paths: its 'scan' method lowers to a
+    while loop sequential over QUERIES, and its 'sort' method lowers to an
+    XLA sort that GSPMD replicates (all-gather + local sort per device) —
+    both observed on the Reddit-scale convert dry-run (§Perf convert iters
+    1 & 4). This is iterated set-counting: each round one comparator per
+    query against a gathered pivot.
+    """
+    n = sorted_arr.shape[0]
+    steps = max(1, int(n).bit_length())  # search range is n+1 wide
+    lo = jnp.zeros(queries.shape, jnp.int32)  # invariant: arr[lo-1] OP q
+    hi = jnp.full(queries.shape, n, jnp.int32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        active = lo < hi  # fixed-iteration loop: freeze once converged
+        mid = (lo + hi) >> 1
+        pivot = jnp.take(sorted_arr, jnp.clip(mid, 0, n - 1), mode="clip")
+        go_right = (pivot < queries) if side == "left" else \
+            (pivot <= queries)
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo.astype(jnp.int32)

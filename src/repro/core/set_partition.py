@@ -1,0 +1,120 @@
+"""Set-partitioning — the UPE primitive (paper §IV-A, Fig. 8, Fig. 12).
+
+Partition an array into (elements satisfying a condition, the rest), stably,
+using an exclusive prefix sum of the condition as each element's write index.
+On the FPGA this is the prefix-sum adder network + relocation router; on TPU
+the prefix sum is a log-depth ``cumsum`` and the relocation is a gather by the
+inverse permutation (or a one-hot matmul on the MXU inside the Pallas kernel —
+see kernels/prefix_partition.py).
+
+These jnp implementations are the *algorithmic* contribution in portable form;
+the Pallas kernels tile the same math through VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def prefix_sum(x: jnp.ndarray, axis: int = 0,
+               exclusive: bool = False) -> jnp.ndarray:
+    """Log-depth prefix sum — the UPE adder network (paper Fig. 12b).
+
+    Uses lax.associative_scan (explicit log-depth slices+adds) rather than
+    jnp.cumsum: XLA lowers cumsum to a reduce-window whose SPMD partitioning
+    degenerates to O(N·window) work on sharded axes (observed as a 1000×
+    per-device FLOP blowup in the MoE dispatch dry-run).
+    """
+    incl = jax.lax.associative_scan(jnp.add, x, axis=axis)
+    return incl - x if exclusive else incl
+
+
+def displacement(cond: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive prefix sum of a boolean condition array.
+
+    displacement[i] = number of selected elements strictly left of i — the
+    paper's "displacement array" (Fig. 12b).
+    """
+    return prefix_sum(cond.astype(jnp.int32), exclusive=True)
+
+
+def partition_indices(cond: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Destination index of every element under a stable two-way partition.
+
+    Selected elements go left (compacted in order); unselected go right
+    (also in order). Returns (dest_index, n_selected).
+    """
+    c = cond.astype(jnp.int32)
+    left = prefix_sum(c, exclusive=True)  # rank among selected
+    right = prefix_sum(1 - c, exclusive=True)  # rank among unselected
+    n_sel = jnp.sum(c)
+    dest = jnp.where(cond, left, n_sel + right)
+    return dest.astype(jnp.int32), n_sel.astype(jnp.int32)
+
+
+def set_partition(values: jnp.ndarray, cond: jnp.ndarray
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable partition of ``values`` by ``cond``; returns (partitioned, n_selected).
+
+    Multi-column variant: ``values`` may be [N] or [N, k]; rows move together
+    (the UPE moves 64-bit (dst,src) pairs as one element).
+    """
+    dest, n_sel = partition_indices(cond)
+    out = jnp.zeros_like(values)
+    if values.ndim == 1:
+        out = out.at[dest].set(values)
+    else:
+        out = out.at[dest, :].set(values)
+    return out, n_sel
+
+
+def radix_partition(values: jnp.ndarray, keys: jnp.ndarray, n_buckets: int
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Multi-way stable partition by small integer ``keys`` in [0, n_buckets).
+
+    One LSD radix-sort digit pass = this operation (paper: "digit-wise passes
+    are precisely set-partitioning"). Returns (partitioned values, bucket
+    start offsets [n_buckets]).
+
+    Implemented as n_buckets cooperating two-way prefix sums: rank within
+    bucket + bucket base offset. All vectorized, no atomics.
+    """
+    onehot = (keys[:, None] == jnp.arange(n_buckets, dtype=keys.dtype)[None, :])
+    onehot_i = onehot.astype(jnp.int32)
+    # rank of element within its bucket (exclusive cumsum per bucket column)
+    within = prefix_sum(onehot_i, axis=0, exclusive=True)  # [N, B]
+    counts = jnp.sum(onehot_i, axis=0)  # [B]
+    base = prefix_sum(counts, exclusive=True)  # exclusive over buckets
+    dest = jnp.sum(onehot_i * (within + base[None, :]), axis=1).astype(jnp.int32)
+    out = jnp.zeros_like(values)
+    if values.ndim == 1:
+        out = out.at[dest].set(values)
+    else:
+        out = out.at[dest, :].set(values)
+    return out, base.astype(jnp.int32)
+
+
+def radix_sort_by_key(values: jnp.ndarray, keys: jnp.ndarray, key_bits: int,
+                      radix_bits: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full LSD radix sort of (keys, values) via repeated radix_partition.
+
+    Stable; ``key_bits`` bounds the key magnitude. This is the reference
+    algorithm the UPE chunk-sort kernel implements in VMEM.
+    """
+    n_buckets = 1 << radix_bits
+    n_passes = max(1, -(-key_bits // radix_bits))  # ceil div
+
+    def body(carry, _):
+        k, v, shift = carry
+        digit = (k >> shift) & (n_buckets - 1)
+        kv = jnp.stack([k, v], axis=1) if v.ndim == 1 else None
+        if kv is not None:
+            out, _ = radix_partition(kv, digit, n_buckets)
+            k2, v2 = out[:, 0], out[:, 1]
+        else:  # pragma: no cover - values always 1-D here
+            raise NotImplementedError
+        return (k2, v2, shift + radix_bits), None
+
+    (k, v, _), _ = jax.lax.scan(
+        body, (keys, values, jnp.int32(0)), None, length=n_passes)
+    return k, v

@@ -1,0 +1,37 @@
+"""Jit'd public wrappers for the AutoGNN Pallas kernels.
+
+These are what core/ and models/ call when ``EngineConfig.use_pallas`` is on:
+they pad to block multiples, handle sentinels, and dispatch to the kernels.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .prefix_partition import prefix_partition
+from .radix_sort import pallas_chunk_sort_fn, radix_sort_chunks
+from .set_count import filter_tree_lookup, pallas_count_fn, set_count_less
+from .segment_agg import segment_sum_sorted
+from .common import pad_pow2_1d
+
+__all__ = [
+    "prefix_partition", "radix_sort_chunks", "pallas_chunk_sort_fn",
+    "set_count_less", "filter_tree_lookup", "pallas_count_fn",
+    "segment_sum_sorted", "segment_sum_padded",
+]
+
+_I32_MAX = 0x7FFFFFFF
+
+
+def segment_sum_padded(dst: jnp.ndarray, messages: jnp.ndarray, n_nodes: int,
+                       v_block: int = 256, d_block: int = 128,
+                       e_block: int = 512) -> jnp.ndarray:
+    """segment_sum_sorted with automatic padding of every axis."""
+    e, d = messages.shape
+    ep = (-e) % e_block
+    dp = (-d) % d_block
+    np_ = (-n_nodes) % v_block
+    dst_p = pad_pow2_1d(dst, e_block, _I32_MAX)
+    msg_p = jnp.pad(messages, ((0, ep), (0, dp)))
+    out = segment_sum_sorted(dst_p, msg_p, n_nodes + np_, v_block=v_block,
+                             d_block=d_block, e_block=e_block)
+    return out[:n_nodes, :d]

@@ -1,0 +1,61 @@
+"""UPE set-partition kernel (paper Fig. 12): prefix-sum + relocation.
+
+One kernel invocation partitions a VMEM-resident block: the condition array
+feeds the log-depth adder network (displacement array), the relocation
+router is a one-hot MXU matmul. Grid iterates independent blocks (the
+multi-UPE configuration); each grid step is one UPE.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, onehot_relocate_i32, prefix_sum_tree
+
+
+def _partition_kernel(cond_ref, val_ref, out_ref, nsel_ref):
+    cond = cond_ref[...].astype(jnp.int32)
+    vals = val_ref[...]
+    incl = prefix_sum_tree(cond)  # inclusive scan — the adder network
+    n_sel = incl[-1]
+    left = incl - cond  # exclusive: rank among selected
+    inv = 1 - cond
+    right = prefix_sum_tree(inv) - inv  # rank among unselected
+    dest = jnp.where(cond == 1, left, n_sel + right)
+    out_ref[...] = onehot_relocate_i32(dest, vals)  # MXU router
+    nsel_ref[...] = n_sel[None]
+
+
+@partial(jax.jit, static_argnames=("block",))
+def prefix_partition(values: jnp.ndarray, cond: jnp.ndarray,
+                     block: int = 1024) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise stable partition. values [N] int32, cond [N] bool.
+
+    N must be a multiple of ``block``; each block partitions independently
+    (one UPE per block), returning per-block selected counts [N/block] —
+    the UPE controller (jnp level) combines blocks.
+    """
+    n = values.shape[0]
+    assert n % block == 0, (n, block)
+    grid = n // block
+    out, nsel = pl.pallas_call(
+        _partition_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((grid,), jnp.int32),
+        ],
+        interpret=INTERPRET,
+    )(cond, values)
+    return out, nsel

@@ -1,0 +1,79 @@
+"""UPE chunk radix sort kernel (paper §V-A, Fig. 15 "splitting" stage).
+
+Each grid step radix-sorts one VMEM-resident chunk of (key, value) pairs —
+one UPE. Every digit pass is a set-partition: per-bucket exclusive prefix
+sums (the adder network, B cooperating columns) give the within-bucket rank,
+bucket bases come from an unrolled scan over the B column sums, and the
+relocation router is the one-hot MXU matmul. Chunks are merged outside the
+kernel by the parallel rank-merge (core/ordering.py) — the "merging" stage.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, onehot_relocate_i32, prefix_sum_tree
+
+
+def _make_kernel(n_passes: int, radix_bits: int):
+    n_buckets = 1 << radix_bits
+
+    def kernel(key_ref, val_ref, out_key_ref, out_val_ref):
+        keys = key_ref[...]
+        vals = val_ref[...]
+        for p in range(n_passes):  # static LSD passes
+            shift = p * radix_bits
+            digit = (keys >> shift) & (n_buckets - 1)
+            onehot = (digit[:, None] == jnp.arange(n_buckets, dtype=jnp.int32)
+                      [None, :]).astype(jnp.int32)  # [N, B]
+            within = prefix_sum_tree(onehot, axis=0) - onehot  # rank in bucket
+            counts = jnp.sum(onehot, axis=0)  # [B]
+            base = prefix_sum_tree(counts) - counts  # exclusive over buckets
+            dest = jnp.sum(onehot * (within + base[None, :]), axis=1)
+            keys = onehot_relocate_i32(dest, keys)
+            vals = onehot_relocate_i32(dest, vals)
+        out_key_ref[...] = keys
+        out_val_ref[...] = vals
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("chunk", "key_bits", "radix_bits"))
+def radix_sort_chunks(keys: jnp.ndarray, values: jnp.ndarray, chunk: int,
+                      key_bits: int, radix_bits: int = 4
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort each ``chunk``-sized block of (keys, values) independently.
+
+    Stable LSD radix sort per chunk. keys/values [N] int32, N % chunk == 0.
+    """
+    n = keys.shape[0]
+    assert n % chunk == 0, (n, chunk)
+    n_passes = max(1, -(-key_bits // radix_bits))
+    grid = n // chunk
+    out_k, out_v = pl.pallas_call(
+        _make_kernel(n_passes, radix_bits),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=INTERPRET,
+    )(keys, values)
+    return out_k, out_v
+
+
+def pallas_chunk_sort_fn(keys, vals, chunk, key_bits):
+    """Adapter matching core.ordering.stable_sort_by_key(chunk_sort_fn=...)."""
+    ks, vs = radix_sort_chunks(keys, vals, chunk=chunk, key_bits=key_bits)
+    return ks, vs

@@ -1,0 +1,110 @@
+"""SCR set-count kernel (paper Fig. 13): comparators + adder tree.
+
+Grid = (target blocks × element blocks). Each tile compares a block of
+targets against a block of elements ([T, E] comparator array) and reduces
+along lanes — the adder tree — accumulating int32 partial counts into the
+target-block output. n_scr ↔ target block height, w_scr ↔ element block
+width: the EngineConfig knobs map 1:1 onto this BlockSpec tiling.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+
+def _count_kernel(tgt_ref, elem_ref, out_ref):
+    j = pl.program_id(1)  # element-block index (minor grid dim)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tgt = tgt_ref[...]  # [T]
+    elem = elem_ref[...]  # [E]
+    cmp = (elem[None, :] < tgt[:, None]).astype(jnp.int32)  # comparators
+    out_ref[...] += jnp.sum(cmp, axis=1)  # adder tree
+
+
+@partial(jax.jit, static_argnames=("t_block", "e_block"))
+def set_count_less(elements: jnp.ndarray, targets: jnp.ndarray,
+                   t_block: int = 256, e_block: int = 2048) -> jnp.ndarray:
+    """counts[t] = |{x in elements : x < targets[t]}| (SCR Reshaper mode).
+
+    elements [E] int32 (pad with INT32_MAX — never < any target),
+    targets [T] int32 (pad arbitrarily; callers slice).
+    """
+    e = elements.shape[0]
+    t = targets.shape[0]
+    assert e % e_block == 0 and t % t_block == 0, (e, e_block, t, t_block)
+    return pl.pallas_call(
+        _count_kernel,
+        grid=(t // t_block, e // e_block),
+        in_specs=[
+            pl.BlockSpec((t_block,), lambda i, j: (i,)),
+            pl.BlockSpec((e_block,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((t_block,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.int32),
+        interpret=INTERPRET,
+    )(targets, elements)
+
+
+def _filter_kernel(tgt_ref, key_ref, pay_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tgt = tgt_ref[...]
+    keys = key_ref[...]
+    pays = pay_ref[...]
+    hit = keys[None, :] == tgt[:, None]  # equality comparators
+    enc = jnp.max(jnp.where(hit, pays[None, :] + 1, 0), axis=1)  # OR tree
+    out_ref[...] = jnp.maximum(out_ref[...], enc)
+
+
+@partial(jax.jit, static_argnames=("t_block", "e_block"))
+def filter_tree_lookup(keys: jnp.ndarray, payloads: jnp.ndarray,
+                       targets: jnp.ndarray, t_block: int = 256,
+                       e_block: int = 2048
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """SCR Reindexer mode: payload-or-miss per target via the filter tree.
+
+    keys must be unique; pad keys with INT32_MIN (never equal to a target).
+    Returns (payload, hit) — payload is -1 on miss.
+    """
+    e = keys.shape[0]
+    t = targets.shape[0]
+    assert e % e_block == 0 and t % t_block == 0
+    enc = pl.pallas_call(
+        _filter_kernel,
+        grid=(t // t_block, e // e_block),
+        in_specs=[
+            pl.BlockSpec((t_block,), lambda i, j: (i,)),
+            pl.BlockSpec((e_block,), lambda i, j: (j,)),
+            pl.BlockSpec((e_block,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((t_block,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.int32),
+        interpret=INTERPRET,
+    )(targets, keys, payloads)
+    hit = enc > 0
+    return jnp.where(hit, enc - 1, -1), hit
+
+
+def pallas_count_fn(sorted_dst, targets):
+    """Adapter for core.reshaping.build_pointer_array(count_fn=...)."""
+    from .common import pad_pow2_1d
+    e_block = min(2048, sorted_dst.shape[0])
+    t_block = min(256, targets.shape[0])
+    elems = pad_pow2_1d(sorted_dst, e_block, 0x7FFFFFFF)
+    t = targets.shape[0]
+    tgts = pad_pow2_1d(targets, t_block, 0)
+    out = set_count_less(elems, tgts, t_block=t_block, e_block=e_block)
+    return out[:t]

@@ -1,0 +1,148 @@
+"""Developer tool: loop-aware per-op inspection of a compiled cell's HLO.
+
+PYTHONPATH=src python -m repro.launch.hlo_inspect --arch X --shape Y \
+    [--mesh single] [--top 15]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+import argparse
+import collections
+import re
+
+import jax
+
+
+def build_call_graph(hlo):
+    from repro.launch.hlo_analysis import _split_computations, _trip_count
+    comps = _split_computations(hlo)
+    calls = collections.defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            if "while(" in line:
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                if bm and bm.group(1) in comps:
+                    tc = _trip_count(comps.get(cm.group(1), [])) if cm else 1
+                    calls[name].append((bm.group(1), tc))
+            else:
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)",
+                                     line):
+                    if m.group(1) in comps and m.group(1) != name:
+                        calls[name].append((m.group(1), 1))
+    mult = collections.defaultdict(int)
+    called = {c for lst in calls.values() for c, _ in lst}
+    entries = [n for n in comps if n not in called]
+
+    def walk(n, m, seen):
+        mult[n] += m
+        for c, k in calls.get(n, []):
+            if c not in seen:
+                walk(c, m * k, seen | {n})
+
+    for e in entries:
+        walk(e, 1, frozenset())
+    return comps, mult
+
+
+def dot_flops_line(line):
+    mo = re.search(r"=\s*(?:\()?\w+\[([\d,]*)\]", line)
+    if not mo:
+        return 0
+    out = 1
+    for d in mo.group(1).split(","):
+        if d:
+            out *= int(d)
+    mk = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    shapes = re.findall(r"(?:bf16|f16|f32|f64|s32|s8|u32)\[([\d,]*)\]",
+                        line[line.find("dot("):])
+    k = 1
+    if shapes and mk and mk.group(1):
+        lhs = [int(x) for x in shapes[0].split(",") if x]
+        for ci in mk.group(1).split(","):
+            if ci and int(ci) < len(lhs):
+                k *= lhs[int(ci)]
+    return 2 * out * k
+
+
+def analyze_collectives(hlo, top=15):
+    """Biggest collective ops, loop-weighted."""
+    from repro.launch.hlo_analysis import (_split_computations,
+                                           _line_collective)
+    comps, mult = build_call_graph(hlo)
+    rows = []
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        for line in lines:
+            col = _line_collective(line)
+            if col:
+                rows.append((col[1] * m, col[1], m, col[0],
+                             line.strip()[:130]))
+    rows.sort(key=lambda r: -r[0])
+    total = sum(r[0] for r in rows)
+    print(f"total collective operand bytes: {total:.3e}")
+    for tot, b, m, kind, line in rows[:top]:
+        print(f"tot={tot/1e9:8.1f}GB b={b/1e9:6.2f}GB x{m:<5} {kind:18} "
+              f"{line[:85]}")
+
+
+def analyze(hlo, top=15):
+    comps, mult = build_call_graph(hlo)
+    rows = []
+    dot_total = 0
+    for name, lines in comps.items():
+        for line in lines:
+            mo = re.search(r"%[\w.\-]+ = (?:\()?(\w+)\[([\d,]*)\]", line)
+            if not mo:
+                continue
+            out = 1
+            for d in mo.group(2).split(","):
+                if d:
+                    out *= int(d)
+            opm = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z\-]+)\(", line)
+            op = opm.group(1) if opm else "?"
+            m = mult.get(name, 1)
+            if " dot(" in line:
+                dot_total += dot_flops_line(line) * m
+            if op in ("parameter", "get-tuple-element", "tuple", "bitcast",
+                      "constant", "copy"):
+                continue
+            rows.append((out * m, out, m, op, line.strip()[:120]))
+    rows.sort(key=lambda r: -r[0])
+    print(f"loop-aware dot FLOPs: {dot_total:.3e}")
+    for tot, out, m, op, line in rows[:top]:
+        print(f"tot={tot:.2e} x{m:<4} {op:24} {line[:100]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--dump", help="write HLO text to this path")
+    ap.add_argument("--collectives", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    cell = build_cell(args.arch, args.shape, mesh)
+    with mesh:
+        comp = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                       donate_argnums=cell.donate_argnums
+                       ).lower(*cell.args).compile()
+    print("cost_analysis flops:", comp.cost_analysis()["flops"])
+    print("cost_analysis bytes:", comp.cost_analysis()["bytes accessed"])
+    hlo = comp.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(hlo)
+    if args.collectives:
+        analyze_collectives(hlo, args.top)
+    else:
+        analyze(hlo, args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,257 @@
+"""Attention: RoPE, blocked flash-scan (online softmax), decode paths.
+
+flash_attention is a lax.scan over KV blocks with a running (max, sumexp,
+acc) — O(block) memory, enabling 32k prefill on a 16 GB chip. GQA is
+expressed by grouping query heads over KV heads. Sliding-window and logit
+softcap cover gemma2. Decode uses a single-pass softmax over the cache
+(optionally int8-quantized with per-(batch,head,token) scales); the
+sequence-sharded long-context decode combine lives in dist/collectives.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.hints import shard_hint
+
+from .common import softcap as _softcap
+
+NEG_INF = -1e30
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0
+         ) -> jnp.ndarray:
+    """x [..., S, dh], positions [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def _group_q(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """[B,H,S,dh] → [B,Hkv,G,S,dh]."""
+    b, h, s, dh = q.shape
+    return q.reshape(b, n_kv, h // n_kv, s, dh)
+
+
+def _blk_mask(sq: int, kv_block: int, j, q_offset: int, causal: bool,
+              window: int | None):
+    q_pos = q_offset + jnp.arange(sq)
+    kv_pos = j * kv_block + jnp.arange(kv_block)
+    mask = jnp.ones((sq, kv_block), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - kv_pos[None, :] < window
+    return mask
+
+
+def _flash_fwd_scan(qg, kb, vb, *, sq, kv_block, q_offset, causal, window,
+                    logit_cap):
+    """Returns (out_unnormalized→normalized, lse). qg pre-scaled fp32."""
+    b, hkv, g, _, dh = qg.shape
+    nb = kb.shape[0]
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kj, vj, j = blk
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kj.astype(jnp.float32))
+        s = _softcap(s, logit_cap)
+        mask = _blk_mask(sq, kv_block, j, q_offset, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = shard_hint(jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32),
+                    "dp", "model", None, None)
+    l0 = shard_hint(jnp.zeros((b, hkv, g, sq), jnp.float32),
+                    "dp", "model", None, None)
+    a0 = shard_hint(jnp.zeros((b, hkv, g, sq, dh), jnp.float32),
+                    "dp", "model", None, None, None)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nb)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out, lse
+
+
+def _make_flash(causal: bool, window: int | None, logit_cap: float | None,
+                kv_block: int, q_offset: int):
+    """custom_vjp flash attention: O(block) memory forward AND backward.
+
+    Without this, jax autodiff saves every kv-block's probability tile as a
+    scan residual — [L, nb, B, H, Sq, blk] ≈ 100 GB/device on the 4k train
+    cells. The backward recomputes P per block from (q, k, v, lse), exactly
+    FlashAttention's scheme, adapted to the TPU-side lax.scan formulation.
+    """
+
+    # "flash_tile" named_scope marks every tile op; the roofline analyzer
+    # classifies this traffic separately because the Pallas kernel
+    # (kernels/flash_attention.py) keeps these tiles in VMEM on real TPUs.
+    @jax.custom_vjp
+    def flash(qg, kb, vb):
+        with jax.named_scope("flash_tile"):
+            out, _ = _flash_fwd_scan(qg, kb, vb, sq=qg.shape[3],
+                                     kv_block=kv_block, q_offset=q_offset,
+                                     causal=causal, window=window,
+                                     logit_cap=logit_cap)
+        return out
+
+    def fwd(qg, kb, vb):
+        with jax.named_scope("flash_tile"):
+            out, lse = _flash_fwd_scan(qg, kb, vb, sq=qg.shape[3],
+                                       kv_block=kv_block, q_offset=q_offset,
+                                       causal=causal, window=window,
+                                       logit_cap=logit_cap)
+        return out, (qg, kb, vb, out, lse)
+
+    def _bwd_impl(res, dout):
+        qg, kb, vb, out, lse = res
+        sq = qg.shape[3]
+        dout = dout.astype(jnp.float32)
+        delta = jnp.sum(dout * out, axis=-1)  # [B,K,G,Sq]
+        nb = kb.shape[0]
+
+        def body(dq, blk):
+            kj, vj, j = blk
+            kjf = kj.astype(jnp.float32)
+            vjf = vj.astype(jnp.float32)
+            s_raw = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kjf)
+            s_cap = _softcap(s_raw, logit_cap)  # bounded pre-mask value
+            mask = _blk_mask(sq, kv_block, j, q_offset, causal, window)
+            s = jnp.where(mask[None, None, None], s_cap, NEG_INF)
+            p = jnp.exp(s - lse[..., None])  # exact probabilities
+            dv_j = jnp.einsum("bkgqc,bkgqd->bkcd", p, dout)
+            dp = jnp.einsum("bkgqd,bkcd->bkgqc", dout, vjf)
+            ds = p * (dp - delta[..., None])
+            if logit_cap is not None:
+                t = s_cap / logit_cap  # tanh(s_raw/cap), in [-1, 1]
+                ds = ds * (1.0 - t * t)
+            ds = jnp.where(mask[None, None, None], ds, 0.0)
+            dq = dq + jnp.einsum("bkgqc,bkcd->bkgqd", ds, kjf)
+            dk_j = jnp.einsum("bkgqc,bkgqd->bkcd", ds, qg)
+            return dq, (dk_j.astype(kb.dtype), dv_j.astype(vb.dtype))
+
+        dq0 = shard_hint(jnp.zeros_like(qg), "dp", "model", None, None, None)
+        dq, (dk, dv) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nb)))
+        return dq, dk, dv
+
+    def bwd(res, dout):
+        with jax.named_scope("flash_tile"):
+            return _bwd_impl(res, dout)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+from functools import lru_cache as _lru_cache
+
+_flash_cache = _lru_cache(maxsize=None)(_make_flash)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    logit_cap: float | None = None, kv_block: int = 512,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """Blocked online-softmax attention (memory-safe fwd+bwd).
+
+    q [B,H,Sq,dh]; k,v [B,Hkv,Skv,dh]; H % Hkv == 0. ``q_offset`` is the
+    absolute position of q[0] (for chunked prefill). Returns [B,H,Sq,dh].
+    """
+    b, h, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0
+    scale = dh ** -0.5
+    qg = _group_q(q, hkv).astype(jnp.float32) * scale  # [B,Hkv,G,Sq,dh]
+    # batch over dp, kv-heads over model — without these hints GSPMD picks a
+    # replicated layout for the online-softmax scan carry and every device
+    # computes all heads (observed 350× FLOP blowup on the dry-run).
+    qg = shard_hint(qg, "dp", "model", None, None, None)
+    nb = skv // kv_block
+    assert nb * kv_block == skv, (skv, kv_block)
+    kb = jnp.moveaxis(k.reshape(b, hkv, nb, kv_block, dh), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, nb, kv_block, dh), 2, 0)
+    kb = shard_hint(kb, None, "dp", "model", None, None)
+    vb = shard_hint(vb, None, "dp", "model", None, None)
+    flash = _flash_cache(causal, window, logit_cap, kv_block, q_offset)
+    out = flash(qg, kb, vb)
+    return out.reshape(b, h, sq, dh).astype(q.dtype)
+
+
+def quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(B,H,S) int8 symmetric quantization of a KV tensor [B,H,S,dh]."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray, *,
+                     window: int | None = None,
+                     logit_cap: float | None = None,
+                     k_scale: jnp.ndarray | None = None,
+                     v_scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """One-token decode: q [B,H,1,dh]; caches [B,Hkv,S,dh] (+int8 scales).
+
+    ``cache_len`` = current valid length (the new token is at cache_len-1).
+    Returns partial-softmax stats too, so sequence-sharded decode can combine
+    across shards — callers that are not sharded use ``.out``.
+    """
+    b, h, _, dh = q.shape
+    _, hkv, s, _ = k_cache.shape
+    if k_scale is not None:
+        k_cache = dequantize_kv(k_cache, k_scale)
+        v_cache = dequantize_kv(v_cache, v_scale)
+    qg = _group_q(q, hkv).astype(jnp.float32) * dh ** -0.5
+    sc = jnp.einsum("bkgqd,bkcd->bkgqc", qg, k_cache.astype(jnp.float32))
+    sc = _softcap(sc, logit_cap)
+    pos = jnp.arange(s)
+    mask = pos[None, :] < cache_len[:, None]  # [B, S]
+    if window is not None:
+        mask &= pos[None, :] >= cache_len[:, None] - window
+    sc = jnp.where(mask[:, None, None, None, :], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1)
+    p = jnp.exp(sc - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgqc,bkcd->bkgqd", p, v_cache.astype(jnp.float32))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, h, 1, dh).astype(q.dtype)
+
+
+def decode_attention_partial(q, k_cache, v_cache, valid_mask, *,
+                             logit_cap=None):
+    """Partial-softmax decode over a *sequence shard* of the cache.
+
+    Returns (m, l, acc) for LSE combination across shards (flash-decoding).
+    q [B,H,1,dh]; caches [B,Hkv,S_shard,dh]; valid_mask [B,S_shard].
+    """
+    b, h, _, dh = q.shape
+    _, hkv, s, _ = k_cache.shape
+    qg = _group_q(q, hkv).astype(jnp.float32) * dh ** -0.5
+    sc = jnp.einsum("bkgqd,bkcd->bkgqc", qg, k_cache.astype(jnp.float32))
+    sc = _softcap(sc, logit_cap)
+    sc = jnp.where(valid_mask[:, None, None, None, :], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1)
+    p = jnp.exp(sc - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgqc,bkcd->bkgqd", p, v_cache.astype(jnp.float32))
+    return m, l, acc  # [B,Hkv,G,1], [B,Hkv,G,1], [B,Hkv,G,1,dh]

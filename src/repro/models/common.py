@@ -1,0 +1,102 @@
+"""Shared model components: init helpers, norms, MLPs, embeddings.
+
+Pure-JAX (no flax): params are nested dicts of arrays, apply fns are plain
+functions. Param dict keys are stable and meaningful — dist/sharding.py
+pattern-matches on them to assign PartitionSpecs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None) -> jnp.ndarray:
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+             zero_centered: bool = False) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale) if zero_centered else scale
+    return (x * w).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+def mlp_init(key, dims: tuple[int, ...], dtype=jnp.float32,
+             bias: bool = True) -> Params:
+    """Plain MLP: dims = (in, h1, ..., out)."""
+    ks = jax.random.split(key, len(dims) - 1)
+    p: Params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p[f"w{i}"] = dense_init(ks[i], a, b, dtype)
+        if bias:
+            p[f"b{i}"] = jnp.zeros((b,), dtype)
+    return p
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, act=jax.nn.relu,
+              final_act: bool = False) -> jnp.ndarray:
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"]
+        if f"b{i}" in p:
+            x = x + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def glu_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_in": dense_init(k2, d_model, d_ff, dtype),
+        "w_out": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def glu_apply(p: Params, x: jnp.ndarray, act=jax.nn.silu) -> jnp.ndarray:
+    return (act(x @ p["w_gate"]) * (x @ p["w_in"])) @ p["w_out"]
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token xent; logits [..., V] fp32-upcast; labels int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,131 @@
+"""DLRM (RM2): sparse embedding tables + dot interaction + MLPs.
+
+JAX has no EmbeddingBag — we build it: `jnp.take` over the table +
+`jax.ops.segment_sum` over the bag (multi-hot) dimension. The per-batch
+sparse-index *deduplication* option reuses the paper's Reindexing primitive
+(sort-unique-rank): duplicate rows in a batch are gathered once and scattered
+back — the AutoGNN technique applied to recsys (DESIGN.md §4).
+
+Tables are row-sharded over the model axis (embedding parallelism); the
+lookup's collective cost is what the roofline for recsys cells measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    bot_mlp: tuple[int, ...] = (512, 256, 64)
+    top_mlp: tuple[int, ...] = (512, 512, 256, 1)
+    vocab_size: int = 1_000_000  # rows per table
+    hot: int = 1  # multi-hot bag size
+    dtype: Any = jnp.float32
+    dedup: bool = False  # AutoGNN-style per-batch row dedup
+
+
+def dlrm_init(cfg: DLRMConfig, key) -> Params:
+    k_t, k_b, k_top = jax.random.split(key, 3)
+    # one stacked table tensor [F, V, D] — rows shard over the model axis
+    tables = (jax.random.normal(
+        k_t, (cfg.n_sparse, cfg.vocab_size, cfg.embed_dim), jnp.float32)
+        * (1.0 / cfg.embed_dim ** 0.5)).astype(cfg.dtype)
+    n_int = cfg.n_sparse + 1
+    d_inter = n_int * (n_int - 1) // 2 + cfg.embed_dim
+    return {
+        "tables": tables,
+        "bot": mlp_init(k_b, (cfg.n_dense,) + cfg.bot_mlp, cfg.dtype),
+        "top": mlp_init(k_top, (d_inter,) + cfg.top_mlp, cfg.dtype),
+    }
+
+
+def embedding_bag(tables: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """EmbeddingBag(sum): tables [F,V,D], idx [B,F,hot] → [B,F,D]."""
+    f = tables.shape[0]
+    # gather per field then reduce the bag dim
+    gathered = jax.vmap(
+        lambda tab, ix: jnp.take(tab, ix, axis=0),
+        in_axes=(0, 1), out_axes=1)(tables, idx)  # [B, F, hot, D]
+    return jnp.sum(gathered, axis=2)
+
+
+def embedding_bag_dedup(tables: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """AutoGNN-adapted lookup: dedup rows per (batch, field) before gather.
+
+    Reindexing (sort-unique-rank) compacts the index multiset; each unique
+    row is fetched once, then scattered back. Wins when hot×B ≫ #unique —
+    exactly the regime of power-law categorical traffic.
+    """
+    b, f, hot = idx.shape
+    d = tables.shape[-1]
+
+    def one_field(tab, ix):  # ix [B, hot]
+        flat = ix.reshape(-1)  # [B*hot]
+        order = jnp.argsort(flat)
+        sv = flat[order]
+        is_first = jnp.concatenate([jnp.ones((1,), bool), sv[1:] != sv[:-1]])
+        # rank via prefix sum (UPE displacement)
+        from repro.core.set_partition import prefix_sum
+        rank = prefix_sum(is_first.astype(jnp.int32)) - 1
+        uniq = jax.ops.segment_max(sv, rank, num_segments=flat.shape[0])
+        rows = jnp.take(tab, uniq, axis=0)  # [U_cap, D] (tail rows unused)
+        inv = jnp.zeros((flat.shape[0],), jnp.int32).at[order].set(rank)
+        out = jnp.take(rows, inv, axis=0).reshape(b, hot, d)
+        return jnp.sum(out, axis=1)  # bag-sum
+
+    return jax.vmap(one_field, in_axes=(0, 1), out_axes=1)(tables, idx)
+
+
+def dlrm_forward(cfg: DLRMConfig, params: Params, dense: jnp.ndarray,
+                 sparse_idx: jnp.ndarray) -> jnp.ndarray:
+    """dense [B, n_dense] f32; sparse_idx [B, F, hot] int32 → logits [B]."""
+    x = mlp_apply(params["bot"], dense.astype(cfg.dtype), act=jax.nn.relu,
+                  final_act=True)  # [B, D]
+    bag = embedding_bag_dedup if cfg.dedup else embedding_bag
+    emb = bag(params["tables"], sparse_idx)  # [B, F, D]
+    z = jnp.concatenate([x[:, None, :], emb], axis=1)  # [B, F+1, D]
+    inter = jnp.einsum("bid,bjd->bij", z, z)  # dot interaction
+    n = z.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    flat = inter[:, iu, ju]  # [B, n(n-1)/2]
+    top_in = jnp.concatenate([flat, x], axis=1)
+    return mlp_apply(params["top"], top_in, act=jax.nn.relu)[:, 0]
+
+
+def dlrm_loss(cfg: DLRMConfig, params: Params, dense, sparse_idx, labels
+              ) -> jnp.ndarray:
+    logits = dlrm_forward(cfg, params, dense, sparse_idx).astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(
+            jnp.exp(-jnp.abs(logits))))
+
+
+def dlrm_retrieval(cfg: DLRMConfig, params: Params, dense: jnp.ndarray,
+                   user_idx: jnp.ndarray, cand_idx: jnp.ndarray,
+                   top_k: int = 100) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Score one query against N candidates — batched, not a loop.
+
+    dense [1, n_dense]; user_idx [1, F, hot]; cand_idx [N_cand, F_c, hot].
+    Candidates are scored with the full interaction by broadcasting the
+    user-side features across the candidate batch.
+    """
+    n_cand = cand_idx.shape[0]
+    d_b = jnp.broadcast_to(dense, (n_cand, dense.shape[1]))
+    fu = user_idx.shape[1]
+    idx = jnp.concatenate(
+        [jnp.broadcast_to(user_idx, (n_cand, fu, user_idx.shape[2])),
+         cand_idx], axis=1)
+    scores = dlrm_forward(cfg, params, d_b, idx)
+    top, ix = jax.lax.top_k(scores, top_k)
+    return top, ix

@@ -1,0 +1,322 @@
+"""GNN model zoo: GraphSAGE, GAT, GatedGCN, MeshGraphNet.
+
+All four consume the layout AutoGNN's preprocessing produces: an edge list
+sorted by destination (+ CSC pointer array when needed). Message passing is
+edge-gather → segment-reduce — `jax.ops.segment_sum` in the portable path,
+kernels/segment_agg.py (one-hot MXU matmul) in the Pallas path. SENTINEL
+edges (padding / dropped samples) are masked out of every reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, dense_init, layer_norm, mlp_apply, mlp_init
+
+SEN = jnp.int32(0x7FFFFFFF)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GraphBatch:
+    """Static-shape graph minibatch (block-diagonal for batched graphs)."""
+
+    edge_dst: jnp.ndarray  # [E] int32, sorted ascending, SENTINEL pad
+    edge_src: jnp.ndarray  # [E] int32
+    node_feat: jnp.ndarray  # [N, Df] float
+    labels: jnp.ndarray  # [N] int32 or [N, Do]/[G, Do] float
+    label_mask: jnp.ndarray  # [N] or [G] bool
+    edge_feat: jnp.ndarray | None = None  # [E, De]
+    graph_ids: jnp.ndarray | None = None  # [N] int32 (batched graphs)
+    n_graphs: int = 1
+
+    def tree_flatten(self):
+        return ((self.edge_dst, self.edge_src, self.node_feat, self.labels,
+                 self.label_mask, self.edge_feat, self.graph_ids),
+                (self.n_graphs,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch, n_graphs=aux[0])
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_feat.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str  # graphsage | gat | gatedgcn | meshgraphnet
+    n_layers: int
+    d_hidden: int
+    n_heads: int = 1
+    aggregator: str = "mean"
+    mlp_layers: int = 2
+    sample_sizes: tuple[int, ...] = ()
+    d_out: int = 0  # regression output dim (0 → classification)
+    dtype: Any = jnp.float32
+    use_pallas_agg: bool = False
+
+
+# ------------------------------------------------------ segment reductions
+def _valid(batch: GraphBatch):
+    return batch.edge_dst < batch.n_nodes
+
+
+def seg_sum(batch: GraphBatch, msgs: jnp.ndarray,
+            use_pallas: bool = False) -> jnp.ndarray:
+    """Σ over incoming edges per dst node; SENTINEL edges contribute 0."""
+    valid = _valid(batch)[:, None]
+    msgs = jnp.where(valid, msgs, 0)
+    if use_pallas:
+        from repro.kernels.ops import segment_sum_padded
+        return segment_sum_padded(batch.edge_dst, msgs.astype(jnp.float32),
+                                  batch.n_nodes).astype(msgs.dtype)
+    dst = jnp.minimum(batch.edge_dst, batch.n_nodes - 1)
+    return jax.ops.segment_sum(msgs, dst, num_segments=batch.n_nodes)
+
+
+def seg_mean(batch: GraphBatch, msgs: jnp.ndarray,
+             use_pallas: bool = False) -> jnp.ndarray:
+    s = seg_sum(batch, msgs, use_pallas)
+    ones = jnp.ones((batch.edge_dst.shape[0], 1), msgs.dtype)
+    deg = seg_sum(batch, ones, use_pallas)
+    return s / jnp.maximum(deg, 1.0)
+
+
+def seg_softmax(batch: GraphBatch, scores: jnp.ndarray) -> jnp.ndarray:
+    """Edge softmax per destination (ragged softmax). scores [E, H]."""
+    dst = jnp.minimum(batch.edge_dst, batch.n_nodes - 1)
+    valid = _valid(batch)[:, None]
+    scores = jnp.where(valid, scores, -1e30)
+    mx = jax.ops.segment_max(scores, dst, num_segments=batch.n_nodes)
+    ex = jnp.exp(scores - mx[dst])
+    ex = jnp.where(valid, ex, 0.0)
+    den = jax.ops.segment_sum(ex, dst, num_segments=batch.n_nodes)
+    return ex / jnp.maximum(den[dst], 1e-20)
+
+
+def gather_src(batch: GraphBatch, h: jnp.ndarray) -> jnp.ndarray:
+    src = jnp.minimum(batch.edge_src, batch.n_nodes - 1)
+    return jnp.take(h, src, axis=0)
+
+
+def gather_dst(batch: GraphBatch, h: jnp.ndarray) -> jnp.ndarray:
+    dst = jnp.minimum(batch.edge_dst, batch.n_nodes - 1)
+    return jnp.take(h, dst, axis=0)
+
+
+# ------------------------------------------------------------- GraphSAGE
+def _sage_init(cfg: GNNConfig, key, d_in: int) -> Params:
+    layers = []
+    d = d_in
+    for i in range(cfg.n_layers):
+        k1, k2, key = jax.random.split(key, 3)
+        layers.append({
+            "w_self": dense_init(k1, d, cfg.d_hidden, cfg.dtype),
+            "w_nb": dense_init(k2, d, cfg.d_hidden, cfg.dtype),
+            "b": jnp.zeros((cfg.d_hidden,), cfg.dtype),
+        })
+        d = cfg.d_hidden
+    return {"layers": layers}
+
+
+def _sage_apply(cfg: GNNConfig, p: Params, batch: GraphBatch) -> jnp.ndarray:
+    h = batch.node_feat.astype(cfg.dtype)
+    for i, lp in enumerate(p["layers"]):
+        msgs = gather_src(batch, h)
+        agg = (seg_mean(batch, msgs, cfg.use_pallas_agg)
+               if cfg.aggregator == "mean"
+               else seg_sum(batch, msgs, cfg.use_pallas_agg))
+        h = h @ lp["w_self"] + agg @ lp["w_nb"] + lp["b"]
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+            h = h / jnp.maximum(
+                jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    return h
+
+
+# ------------------------------------------------------------------- GAT
+def _gat_init(cfg: GNNConfig, key, d_in: int) -> Params:
+    layers = []
+    d = d_in
+    for i in range(cfg.n_layers):
+        k1, k2, k3, key = jax.random.split(key, 4)
+        heads = cfg.n_heads if i < cfg.n_layers - 1 else 1
+        layers.append({
+            "w": dense_init(k1, d, heads * cfg.d_hidden, cfg.dtype),
+            "a_src": (jax.random.normal(k2, (heads, cfg.d_hidden)) * 0.1
+                      ).astype(cfg.dtype),
+            "a_dst": (jax.random.normal(k3, (heads, cfg.d_hidden)) * 0.1
+                      ).astype(cfg.dtype),
+        })
+        d = heads * cfg.d_hidden
+    return {"layers": layers}
+
+
+def _gat_apply(cfg: GNNConfig, p: Params, batch: GraphBatch) -> jnp.ndarray:
+    h = batch.node_feat.astype(cfg.dtype)
+    for i, lp in enumerate(p["layers"]):
+        heads = lp["a_src"].shape[0]
+        z = (h @ lp["w"]).reshape(batch.n_nodes, heads, cfg.d_hidden)
+        s_src = jnp.einsum("nhd,hd->nh", z, lp["a_src"])
+        s_dst = jnp.einsum("nhd,hd->nh", z, lp["a_dst"])
+        e = jax.nn.leaky_relu(
+            gather_src(batch, s_src) + gather_dst(batch, s_dst), 0.2)
+        alpha = seg_softmax(batch, e)  # [E, H]
+        msgs = gather_src(batch, z) * alpha[..., None]  # [E, H, D]
+        agg = seg_sum(batch, msgs.reshape(msgs.shape[0], -1),
+                      cfg.use_pallas_agg)
+        h = agg.reshape(batch.n_nodes, heads * cfg.d_hidden)
+        if i < cfg.n_layers - 1:
+            h = jax.nn.elu(h)
+    return h
+
+
+# -------------------------------------------------------------- GatedGCN
+def _ggcn_init(cfg: GNNConfig, key, d_in: int, d_ein: int) -> Params:
+    k_n, k_e, key = jax.random.split(key, 3)
+    layers = []
+    for _ in range(cfg.n_layers):
+        ks = jax.random.split(key, 6)
+        key = ks[5]
+        d = cfg.d_hidden
+        layers.append({
+            "A": dense_init(ks[0], d, d, cfg.dtype),
+            "B": dense_init(ks[1], d, d, cfg.dtype),
+            "C": dense_init(ks[2], d, d, cfg.dtype),
+            "U": dense_init(ks[3], d, d, cfg.dtype),
+            "V": dense_init(ks[4], d, d, cfg.dtype),
+            "ln_h_scale": jnp.ones((d,), cfg.dtype),
+            "ln_h_bias": jnp.zeros((d,), cfg.dtype),
+            "ln_e_scale": jnp.ones((d,), cfg.dtype),
+            "ln_e_bias": jnp.zeros((d,), cfg.dtype),
+        })
+    return {
+        "embed_n": dense_init(k_n, d_in, cfg.d_hidden, cfg.dtype),
+        "embed_e": dense_init(k_e, max(d_ein, 1), cfg.d_hidden, cfg.dtype),
+        "layers": layers,
+    }
+
+
+def _ggcn_apply(cfg: GNNConfig, p: Params, batch: GraphBatch) -> jnp.ndarray:
+    h = batch.node_feat.astype(cfg.dtype) @ p["embed_n"]
+    if batch.edge_feat is not None:
+        e = batch.edge_feat.astype(cfg.dtype) @ p["embed_e"]
+    else:
+        e = jnp.zeros((batch.edge_dst.shape[0], cfg.d_hidden), cfg.dtype)
+    for lp in p["layers"]:
+        e_new = (gather_dst(batch, h @ lp["A"]) + gather_src(batch, h @ lp["B"])
+                 + e @ lp["C"])
+        gate = jax.nn.sigmoid(e_new)
+        msg = gate * gather_src(batch, h @ lp["V"])
+        num = seg_sum(batch, msg, cfg.use_pallas_agg)
+        den = seg_sum(batch, gate, cfg.use_pallas_agg)
+        h_new = h @ lp["U"] + num / (den + 1e-6)
+        h = h + jax.nn.relu(
+            layer_norm(h_new, lp["ln_h_scale"], lp["ln_h_bias"]))
+        e = e + jax.nn.relu(
+            layer_norm(e_new, lp["ln_e_scale"], lp["ln_e_bias"]))
+    return h
+
+
+# ---------------------------------------------------------- MeshGraphNet
+def _mgn_init(cfg: GNNConfig, key, d_in: int, d_ein: int) -> Params:
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 4 + cfg.n_layers * 2)
+    mlp_dims = (d,) * cfg.mlp_layers
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "edge_mlp": mlp_init(ks[4 + 2 * i], (3 * d,) + mlp_dims + (d,),
+                                 cfg.dtype),
+            "node_mlp": mlp_init(ks[5 + 2 * i], (2 * d,) + mlp_dims + (d,),
+                                 cfg.dtype),
+        })
+    return {
+        "enc_n": mlp_init(ks[0], (d_in,) + mlp_dims + (d,), cfg.dtype),
+        "enc_e": mlp_init(ks[1], (max(d_ein, 1),) + mlp_dims + (d,),
+                          cfg.dtype),
+        "dec": mlp_init(ks[2], (d,) + mlp_dims + (max(cfg.d_out, 1),),
+                        cfg.dtype),
+        "layers": layers,
+    }
+
+
+def _mgn_apply(cfg: GNNConfig, p: Params, batch: GraphBatch) -> jnp.ndarray:
+    h = mlp_apply(p["enc_n"], batch.node_feat.astype(cfg.dtype))
+    if batch.edge_feat is not None:
+        e = mlp_apply(p["enc_e"], batch.edge_feat.astype(cfg.dtype))
+    else:
+        e = jnp.zeros((batch.edge_dst.shape[0], cfg.d_hidden), cfg.dtype)
+    for lp in p["layers"]:
+        e = e + mlp_apply(lp["edge_mlp"], jnp.concatenate(
+            [e, gather_src(batch, h), gather_dst(batch, h)], axis=-1))
+        agg = seg_sum(batch, e, cfg.use_pallas_agg)
+        h = h + mlp_apply(lp["node_mlp"], jnp.concatenate([h, agg], axis=-1))
+    return mlp_apply(p["dec"], h)
+
+
+# ------------------------------------------------------------ public API
+_INIT = {"graphsage": _sage_init, "gat": _gat_init}
+_APPLY = {"graphsage": _sage_apply, "gat": _gat_apply,
+          "gatedgcn": _ggcn_apply, "meshgraphnet": _mgn_apply}
+
+
+def gnn_init(cfg: GNNConfig, key, d_in: int, d_edge: int = 0,
+             n_classes: int = 0) -> Params:
+    if cfg.kind in ("graphsage", "gat"):
+        p = _INIT[cfg.kind](cfg, key, d_in)
+    elif cfg.kind == "gatedgcn":
+        p = _ggcn_init(cfg, key, d_in, d_edge)
+    elif cfg.kind == "meshgraphnet":
+        p = _mgn_init(cfg, key, d_in, d_edge)
+    else:
+        raise ValueError(cfg.kind)
+    if n_classes:
+        kh = jax.random.fold_in(key, 999)
+        d_feat_out = {
+            "graphsage": cfg.d_hidden,
+            "gat": cfg.d_hidden,  # last GAT layer: 1 head × d_hidden
+            "gatedgcn": cfg.d_hidden,
+            "meshgraphnet": max(cfg.d_out, 1),
+        }[cfg.kind]
+        p["head"] = dense_init(kh, d_feat_out, n_classes, cfg.dtype)
+    return p
+
+
+def gnn_apply(cfg: GNNConfig, params: Params, batch: GraphBatch
+              ) -> jnp.ndarray:
+    """Node representations (or regression output for meshgraphnet)."""
+    out = _APPLY[cfg.kind](cfg, params, batch)
+    if "head" in params:
+        out = out @ params["head"]
+    return out
+
+
+def pool_graphs(batch: GraphBatch, h: jnp.ndarray) -> jnp.ndarray:
+    """Mean-pool node outputs per graph (batched-small-graphs shapes)."""
+    gid = batch.graph_ids
+    s = jax.ops.segment_sum(h, gid, num_segments=batch.n_graphs)
+    c = jax.ops.segment_sum(jnp.ones((h.shape[0], 1), h.dtype), gid,
+                            num_segments=batch.n_graphs)
+    return s / jnp.maximum(c, 1.0)
+
+
+def gnn_loss(cfg: GNNConfig, params: Params, batch: GraphBatch
+             ) -> jnp.ndarray:
+    from .common import cross_entropy
+    out = gnn_apply(cfg, params, batch)
+    graph_level = batch.graph_ids is not None
+    if graph_level:
+        out = pool_graphs(batch, out)
+    if cfg.d_out and cfg.kind == "meshgraphnet":
+        err = (out.astype(jnp.float32) - batch.labels.astype(jnp.float32))
+        m = batch.label_mask[:, None].astype(jnp.float32)
+        return jnp.sum(err * err * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return cross_entropy(out, batch.labels,
+                         batch.label_mask.astype(jnp.float32))

@@ -1,0 +1,406 @@
+"""LM-family transformer: dense / GQA / MoE / gemma2-style local+global.
+
+Params are stacked over layers and the stack is consumed with lax.scan, so
+tracing cost and HLO size are O(1) in depth (essential for the 64-layer
+314B dry-runs). Gemma2's alternating pattern scans over (local, global)
+layer *pairs* so the local layers can keep a ring-buffer window cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.hints import current_layout, shard_hint
+
+from .attention import (decode_attention, dequantize_kv, flash_attention,
+                        quantize_kv, rope)
+from .common import (Params, cross_entropy, dense_init, embed_init,
+                     glu_apply, glu_init, rms_norm, softcap)
+from .moe import moe_apply, moe_apply_local, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 → d_model // n_heads
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    qkv_bias: bool = False
+    local_global: bool = False  # gemma2 alternating local/global
+    sliding_window: int = 4096
+    attn_logit_cap: float | None = None
+    final_logit_cap: float | None = None
+    rope_theta: float = 10000.0
+    norm_zero_centered: bool = False
+    post_norm: bool = False
+    tied_embed: bool = False
+    embed_scale: bool = False  # gemma2 multiplies by sqrt(d)
+    dtype: Any = jnp.float32
+    remat: bool = False
+    kv_cache_dtype: str = "bf16"  # "bf16" | "int8"
+    kv_block: int = 512
+    # parallelism policy for train cells: "tp" (model axis = TP/EP) or
+    # "dp_only" (pure data parallel; right for small models on big meshes)
+    train_layout: str = "tp"
+    # scan over a stacked layer axis (O(1) HLO size — required for 64L/314B)
+    # or unroll layers (better XLA scheduling + no stacked-grad
+    # accumulation traffic — right for small models)
+    scan_layers: bool = True
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def padded(self, model_axis: int) -> "LMConfig":
+        """Megatron-style padding so every sharded dim divides the TP axis.
+
+        MHA (kv == heads) pads both together; GQA pads kv up to the axis
+        (KV-head replication) and heads to a multiple of the padded kv.
+        """
+        def up(x, m):
+            return -(-x // m) * m
+        if self.n_kv_heads == self.n_heads:  # MHA
+            nh = up(self.n_heads, model_axis)
+            nkv = nh
+        else:  # GQA
+            nkv = up(self.n_kv_heads, model_axis)
+            nh = up(up(self.n_heads, model_axis), nkv)
+        return dataclasses.replace(
+            self, vocab=up(self.vocab, model_axis), n_kv_heads=nkv,
+            n_heads=nh,
+            head_dim=self.dh)  # freeze: padding heads must not shrink dh
+
+
+# --------------------------------------------------------------------- init
+def _block_init(cfg: LMConfig, key) -> Params:
+    dh = cfg.dh
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * dh, cfg.dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * dh, cfg.dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * dh, cfg.dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, cfg.d_model, cfg.dtype),
+        "ln_attn": jnp.zeros((cfg.d_model,), cfg.dtype)
+        if cfg.norm_zero_centered else jnp.ones((cfg.d_model,), cfg.dtype),
+        "ln_mlp": jnp.zeros((cfg.d_model,), cfg.dtype)
+        if cfg.norm_zero_centered else jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * dh,), cfg.dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * dh,), cfg.dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * dh,), cfg.dtype)
+    if cfg.post_norm:
+        z = jnp.zeros if cfg.norm_zero_centered else jnp.ones
+        p["ln_post_attn"] = z((cfg.d_model,), cfg.dtype)
+        p["ln_post_mlp"] = z((cfg.d_model,), cfg.dtype)
+    if cfg.is_moe:
+        p["moe"] = moe_init(ks[4], cfg.d_model, cfg.d_ff, cfg.moe_experts,
+                            cfg.dtype)
+    else:
+        p["mlp"] = glu_init(ks[5], cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def lm_init(cfg: LMConfig, key) -> Params:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    n_stacks = cfg.n_layers // 2 if cfg.local_global else cfg.n_layers
+    if cfg.local_global:
+        kl, kg = jax.random.split(k_blocks)
+        blocks = {
+            "local": jax.vmap(lambda k: _block_init(cfg, k))(
+                jax.random.split(kl, n_stacks)),
+            "global": jax.vmap(lambda k: _block_init(cfg, k))(
+                jax.random.split(kg, n_stacks)),
+        }
+    elif not cfg.scan_layers:
+        blocks = {"blocks_list": [
+            _block_init(cfg, k) for k in jax.random.split(k_blocks,
+                                                          n_stacks)]}
+    else:
+        blocks = {"blocks": jax.vmap(lambda k: _block_init(cfg, k))(
+            jax.random.split(k_blocks, n_stacks))}
+    p: Params = {
+        "embed": embed_init(k_embed, cfg.vocab, cfg.d_model, cfg.dtype),
+        "ln_final": jnp.zeros((cfg.d_model,), cfg.dtype)
+        if cfg.norm_zero_centered else jnp.ones((cfg.d_model,), cfg.dtype),
+        **blocks,
+    }
+    if not cfg.tied_embed:
+        p["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab, cfg.dtype)
+    return p
+
+
+# ------------------------------------------------------------------ forward
+def _attn(cfg: LMConfig, p: Params, x, positions, *, window=None):
+    b, s, _ = x.shape
+    dh = cfg.dh
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    q = rope(q, positions[None, None, :], cfg.rope_theta)
+    k = rope(k, positions[None, None, :], cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=True, window=window,
+                        logit_cap=cfg.attn_logit_cap,
+                        kv_block=min(cfg.kv_block, s))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * dh)
+    return o @ p["wo"], k, v
+
+
+def _block(cfg: LMConfig, p: Params, x, positions, *, window=None):
+    h, _, _ = _attn(cfg, p, rms_norm(x, p["ln_attn"],
+                                     zero_centered=cfg.norm_zero_centered),
+                    positions, window=window)
+    if cfg.post_norm:
+        h = rms_norm(h, p["ln_post_attn"],
+                     zero_centered=cfg.norm_zero_centered)
+    x = x + h
+    z = rms_norm(x, p["ln_mlp"], zero_centered=cfg.norm_zero_centered)
+    if cfg.is_moe:
+        b, s, d = z.shape
+        # shard-local dispatch in every layout (falls back off-mesh)
+        y, aux = moe_apply_local(p["moe"], z.reshape(b * s, d),
+                                 top_k=cfg.moe_top_k)
+        y = y.reshape(b, s, d)
+    else:
+        y, aux = glu_apply(p["mlp"], z, act=jax.nn.gelu
+                           if cfg.name.startswith("gemma") else jax.nn.silu
+                           ), 0.0
+    if cfg.post_norm:
+        y = rms_norm(y, p["ln_post_mlp"], zero_centered=cfg.norm_zero_centered)
+    # Megatron-SP-style residual sharding: the scan carry is the remat
+    # checkpoint, so keeping it sequence-sharded over 'model' divides the
+    # saved-activation footprint by the TP width ([L,B,S,d] was the largest
+    # buffer on the 32B/314B train dry-runs). Blocks re-gather S internally.
+    return shard_hint(x + y, "dp", "model", None), aux
+
+
+def lm_trunk(cfg: LMConfig, params: Params, tokens: jnp.ndarray
+             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S] → (hidden [B, S, d] post final norm, aux_loss)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = shard_hint(x, "dp", None, None)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    positions = jnp.arange(s)
+
+    if cfg.local_global:
+        def pair(x, ps):
+            pl_, pg = ps
+            x, a1 = _block(cfg, pl_, x, positions,
+                           window=cfg.sliding_window)
+            x, a2 = _block(cfg, pg, x, positions, window=None)
+            return x, a1 + a2
+        body = jax.checkpoint(pair) if cfg.remat else pair
+        x, auxs = jax.lax.scan(
+            lambda c, ps: body(c, ps), x,
+            (params["local"], params["global"]))
+    elif "blocks_list" in params:  # unrolled layers
+        def one(x, pb):
+            return _block(cfg, pb, x, positions)
+        body = jax.checkpoint(one) if cfg.remat else one
+        auxs = []
+        for pb in params["blocks_list"]:
+            x, a = body(x, pb)
+            auxs.append(a)
+        auxs = jnp.stack(auxs)
+    else:
+        def one(x, pb):
+            return _block(cfg, pb, x, positions)
+        body = jax.checkpoint(one) if cfg.remat else one
+        x, auxs = jax.lax.scan(lambda c, pb: body(c, pb), x,
+                               params["blocks"])
+
+    x = rms_norm(x, params["ln_final"], zero_centered=cfg.norm_zero_centered)
+    return x, jnp.sum(auxs)
+
+
+def lm_head_logits(cfg: LMConfig, params: Params, x: jnp.ndarray
+                   ) -> jnp.ndarray:
+    head = params["embed"].T if cfg.tied_embed else params["lm_head"]
+    return softcap(x @ head.astype(x.dtype), cfg.final_logit_cap)
+
+
+def lm_forward(cfg: LMConfig, params: Params, tokens: jnp.ndarray
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S] → (logits [B, S, V], aux_loss)."""
+    x, aux = lm_trunk(cfg, params, tokens)
+    return lm_head_logits(cfg, params, x), aux
+
+
+def lm_loss(cfg: LMConfig, params: Params, tokens: jnp.ndarray
+            ) -> jnp.ndarray:
+    """Next-token cross entropy (+ MoE aux)."""
+    logits, aux = lm_forward(cfg, params, tokens)
+    loss = cross_entropy(logits[:, :-1], tokens[:, 1:])
+    return loss + 0.01 * aux
+
+
+# -------------------------------------------------------------------- decode
+def make_cache(cfg: LMConfig, batch: int, max_len: int) -> Params:
+    """Zeroed KV cache pytree (stacked over the scan axis)."""
+    dh = cfg.dh
+    n_stacks = cfg.n_layers // 2 if cfg.local_global else cfg.n_layers
+    qdt = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+
+    def kv(length):
+        shape = (n_stacks, batch, cfg.n_kv_heads, length, dh)
+        c = {"k": jnp.zeros(shape, qdt), "v": jnp.zeros(shape, qdt)}
+        if cfg.kv_cache_dtype == "int8":
+            c["k_scale"] = jnp.zeros(shape[:-1] + (1,), jnp.float32)
+            c["v_scale"] = jnp.zeros(shape[:-1] + (1,), jnp.float32)
+        return c
+
+    if cfg.local_global:
+        return {"local": kv(min(cfg.sliding_window, max_len)),
+                "global": kv(max_len)}
+    return {"blocks": kv(max_len)}
+
+
+def _cache_insert(cfg: LMConfig, layer_cache, k, v, pos):
+    """Insert one token's k,v [B,Hkv,1,dh] at ``pos`` (ring for windows)."""
+    length = layer_cache["k"].shape[-2]
+    slot = pos % length
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        out = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["k"], kq, slot, axis=-2),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["v"], vq, slot, axis=-2),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["k_scale"], ks, slot, axis=-2),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["v_scale"], vs, slot, axis=-2),
+        }
+    else:
+        out = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["k"], k.astype(jnp.bfloat16), slot, axis=-2),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                layer_cache["v"], v.astype(jnp.bfloat16), slot, axis=-2),
+        }
+    return out
+
+
+def _decode_block(cfg: LMConfig, p: Params, x, layer_cache, pos, *,
+                  window=None):
+    """One-token decode through one block. x [B,1,d]."""
+    b = x.shape[0]
+    dh = cfg.dh
+    z = rms_norm(x, p["ln_attn"], zero_centered=cfg.norm_zero_centered)
+    q = z @ p["wq"]
+    k = z @ p["wk"]
+    v = z @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, 1, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, 1, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = rope(q, posv[None, None, :], cfg.rope_theta)
+    k = rope(k, posv[None, None, :], cfg.rope_theta)
+    new_cache = _cache_insert(cfg, layer_cache, k, v, pos)
+    cache_len = jnp.full((b,), pos + 1, jnp.int32)
+    length = new_cache["k"].shape[-2]
+    eff_len = jnp.minimum(cache_len, length)  # ring buffer truncation
+    o = decode_attention(
+        q, new_cache["k"], new_cache["v"], eff_len,
+        window=None,  # window already enforced by ring-buffer extent
+        logit_cap=cfg.attn_logit_cap,
+        k_scale=new_cache.get("k_scale"), v_scale=new_cache.get("v_scale"))
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * dh)
+    h = o @ p["wo"]
+    if cfg.post_norm:
+        h = rms_norm(h, p["ln_post_attn"],
+                     zero_centered=cfg.norm_zero_centered)
+    x = x + h
+    z = rms_norm(x, p["ln_mlp"], zero_centered=cfg.norm_zero_centered)
+    if cfg.is_moe:
+        y, _ = moe_apply(p["moe"], z.reshape(b, -1), top_k=cfg.moe_top_k)
+        y = y.reshape(b, 1, -1)
+    else:
+        y = glu_apply(p["mlp"], z, act=jax.nn.gelu
+                      if cfg.name.startswith("gemma") else jax.nn.silu)
+    if cfg.post_norm:
+        y = rms_norm(y, p["ln_post_mlp"], zero_centered=cfg.norm_zero_centered)
+    return x + y, new_cache
+
+
+def lm_decode_step(cfg: LMConfig, params: Params, cache: Params,
+                   tokens: jnp.ndarray, pos: jnp.ndarray
+                   ) -> tuple[jnp.ndarray, Params]:
+    """One greedy decode step. tokens [B,1] int32; pos scalar int32.
+
+    Returns (next_token [B,1], updated cache).
+    """
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0)[:, None, :].astype(
+        cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+
+    if cfg.local_global:
+        def pair(x, xs):
+            pl_, pg, cl, cg = xs
+            x, ncl = _decode_block(cfg, pl_, x, cl, pos)
+            x, ncg = _decode_block(cfg, pg, x, cg, pos)
+            return x, (ncl, ncg)
+        x, (ncl, ncg) = jax.lax.scan(
+            pair, x, (params["local"], params["global"],
+                      cache["local"], cache["global"]))
+        new_cache = {"local": ncl, "global": ncg}
+    elif "blocks_list" in params:  # unrolled layers
+        slices = []
+        for i, pb in enumerate(params["blocks_list"]):
+            cb = jax.tree.map(lambda c: c[i], cache["blocks"])
+            x, ncb = _decode_block(cfg, pb, x, cb, pos)
+            slices.append(ncb)
+        new_cache = {"blocks": jax.tree.map(
+            lambda *xs: jnp.stack(xs), *slices)}
+    else:
+        def one(x, xs):
+            pb, cb = xs
+            x, ncb = _decode_block(cfg, pb, x, cb, pos)
+            return x, ncb
+        x, ncb = jax.lax.scan(one, x, (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": ncb}
+
+    x = rms_norm(x, params["ln_final"], zero_centered=cfg.norm_zero_centered)
+    head = params["embed"].T if cfg.tied_embed else params["lm_head"]
+    logits = softcap(x @ head.astype(x.dtype), cfg.final_logit_cap)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return nxt, new_cache
+
+
+def lm_prefill(cfg: LMConfig, params: Params, tokens: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Prefill: forward over the prompt, return last-position logits.
+
+    The LM head runs on the last position only — materializing [B,S,V]
+    prefill logits at V=152k/256k would waste ~300 GB of HBM traffic.
+    (Cache writing during prefill is a serving optimization tracked in §Perf;
+    the dry-run cost of prefill is dominated by the trunk itself.)
+    """
+    x, _ = lm_trunk(cfg, params, tokens)
+    return lm_head_logits(cfg, params, x[:, -1])

@@ -1,0 +1,53 @@
+"""Pallas flash-attention kernel vs dense oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from tests.test_attention import dense_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _qkv(key, b=1, h=2, hkv=1, sq=64, skv=64, dh=32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return (jax.random.normal(k1, (b, h, sq, dh)),
+            jax.random.normal(k2, (b, hkv, skv, dh)),
+            jax.random.normal(k3, (b, hkv, skv, dh)))
+
+
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None), (False, None, None), (True, 16, None),
+    (True, None, 50.0)])
+@pytest.mark.parametrize("bq,bk", [(16, 16), (32, 64), (64, 32)])
+def test_flash_kernel_matches_dense(causal, window, cap, bq, bk):
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    got = flash_attention_bhsd(q, k, v, causal=causal, window=window,
+                               logit_cap=cap, bq=bq, bk=bk)
+    want = dense_ref(q, k, v, causal=causal, window=window, logit_cap=cap)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dh", [16, 64, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_shape_dtype_sweep(dh, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(1), b=2, h=2, hkv=2, sq=32, skv=64,
+                   dh=dh)
+    q, k, v = q.astype(dtype), k.astype(dtype), v.astype(dtype)
+    got = flash_attention_bhsd(q, k, v, bq=16, bk=16)
+    want = dense_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(got.astype(jnp.float32), want, rtol=tol,
+                               atol=tol)
+    assert got.dtype == dtype
+
+
+def test_flash_kernel_gqa_matches_scan_implementation():
+    from repro.models.attention import flash_attention as flash_scan
+    q, k, v = _qkv(jax.random.PRNGKey(2), b=2, h=4, hkv=2, sq=32, skv=32,
+                   dh=16)
+    got = flash_attention_bhsd(q, k, v, bq=16, bk=16)
+    want = flash_scan(q, k, v, kv_block=16)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,39 @@
+"""Unit tests for the HLO collective-bytes analyzer."""
+from repro.launch.hlo_analysis import collective_bytes
+
+HLO = """HloModule test
+
+%body (p: (s32[], f32[32,32])) -> (s32[], f32[32,32]) {
+  %ag = f32[32,32]{1,0} all-gather(%gte), channel_id=1, replica_groups=[4,2]<=[2,4]T(1,0), dimensions={0}
+  %ar = f32[32,32]{1,0} all-reduce(%ag), channel_id=2, replica_groups=[2,4]<=[8]
+}
+
+%cond (p: (s32[], f32[32,32])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%g, %c), direction=LT
+}
+
+ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+  %w = (s32[], f32[32,32]) while(%t), condition=%cond, body=%body
+  %rs = f32[16,64]{1,0} reduce-scatter(%x), channel_id=3, replica_groups=[1,4]<=[4], dimensions={0}
+  ROOT %out = f32[64,64]{1,0} all-reduce(%y), channel_id=4, replica_groups={{0,1},{2,3}}
+}
+"""
+
+
+def test_collective_bytes_loop_multiplied():
+    stats = collective_bytes(HLO)
+    # all-gather operand = 32*32*4 / group(2) = 2048, ×7 loop trips
+    assert stats.bytes_by_kind["all-gather"] == 2048 * 7
+    # all-reduce in body: 4096 × 7; in entry: 64*64*4 = 16384 → total
+    assert stats.bytes_by_kind["all-reduce"] == 4096 * 7 + 16384
+    # reduce-scatter operand = out × group = 16*64*4*4 = 16384
+    assert stats.bytes_by_kind["reduce-scatter"] == 16384
+    assert stats.count_by_kind["all-reduce"] == 2
+    assert stats.total_bytes > 0
+
+
+def test_no_collectives():
+    stats = collective_bytes("ENTRY %m (a: f32[4]) -> f32[4] {\n"
+                             "  ROOT %r = f32[4]{0} add(%a, %a)\n}\n")
+    assert stats.total_bytes == 0

@@ -1,0 +1,19 @@
+"""EngineConfig.use_pallas: the full conversion through the UPE/SCR kernels
+must equal the jnp path bit-for-bit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import COO, EngineConfig, convert, random_coo
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_pallas_engine_convert_matches_jnp():
+    rng = np.random.default_rng(0)
+    dst, src = random_coo(rng, 64, 800)
+    coo = COO.from_arrays(dst, src, 64, capacity=1024)
+    csc_jnp = convert(coo, EngineConfig(w_upe=256, use_pallas=False))
+    csc_pl = convert(coo, EngineConfig(w_upe=256, use_pallas=True))
+    np.testing.assert_array_equal(csc_pl.ptr, csc_jnp.ptr)
+    np.testing.assert_array_equal(csc_pl.idx, csc_jnp.idx)

@@ -1,0 +1,117 @@
+"""Tests for the §Perf machinery: rank_in_sorted, sharded/local MoE,
+scan-vs-unrolled layers, sorted-stream reshaping."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.set_count import rank_in_sorted
+from repro.models.moe import moe_apply, moe_apply_local, moe_init
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# -------------------------------------------------------- rank_in_sorted
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(-100, 100), min_size=1, max_size=200),
+       st.lists(st.integers(-105, 105), min_size=1, max_size=64),
+       st.sampled_from(["left", "right"]))
+def test_rank_in_sorted_matches_searchsorted(arr, qs, side):
+    a = jnp.array(sorted(arr), jnp.int32)
+    q = jnp.array(qs, jnp.int32)
+    got = rank_in_sorted(a, q, side=side)
+    want = np.searchsorted(np.asarray(a), np.asarray(q), side=side)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_rank_in_sorted_2d_batched():
+    a = jnp.array([0, 2, 4, 6], jnp.int32)
+    q = jnp.array([[1, 5], [0, 7]], jnp.int32)
+    got = rank_in_sorted(a, q)
+    np.testing.assert_array_equal(got, [[1, 3], [0, 4]])
+
+
+def test_rank_in_sorted_single_element_array():
+    a = jnp.array([5], jnp.int32)
+    q = jnp.array([4, 5, 6], jnp.int32)
+    np.testing.assert_array_equal(rank_in_sorted(a, q, "left"), [0, 0, 1])
+    np.testing.assert_array_equal(rank_in_sorted(a, q, "right"), [0, 1, 1])
+
+
+# ------------------------------------------------- sorted-stream reshaping
+def test_pointer_array_sorted_method_equals_scr_method():
+    from repro.core.reshaping import build_pointer_array
+    rng = np.random.default_rng(0)
+    dst = np.sort(rng.integers(0, 50, 400)).astype(np.int32)
+    a = build_pointer_array(jnp.array(dst), 50, method="sorted")
+    b = build_pointer_array(jnp.array(dst), 50, method="scr", block=64)
+    np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------ MoE local
+def test_moe_local_falls_back_off_mesh_and_matches():
+    """Without a mesh, moe_apply_local == moe_apply exactly."""
+    p = moe_init(jax.random.PRNGKey(0), 16, 32, 4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, 16))
+    y1, a1 = moe_apply(p, x, top_k=2)
+    y2, a2 = moe_apply_local(p, x, top_k=2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+
+
+def test_moe_sharded_dispatch_matches_global_when_no_drops():
+    """Per-shard capacity groups == global dispatch when capacity is ample
+    (run under 4 virtual devices in a subprocess)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        mesh = jax.make_mesh((4,), ("data",))
+        from repro.models.moe import moe_apply, moe_apply_local, moe_init
+        p = moe_init(jax.random.PRNGKey(0), 16, 32, 4)
+        x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+        y_ref, _ = moe_apply(p, x, top_k=2, capacity_factor=8.0)
+        with mesh:
+            y, _ = jax.jit(lambda p, x: moe_apply_local(
+                p, x, top_k=2, capacity_factor=8.0))(p, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-5)
+        print("OK")
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={**os.environ,
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+             "PYTHONPATH": os.path.join(root, "src")},
+        cwd=root, timeout=600)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+# --------------------------------------------------- scan vs unrolled
+def test_unrolled_layers_match_scan():
+    from repro.configs import get_config
+    from repro.models.transformer import lm_forward, lm_init
+    cfg_s = get_config("codeqwen1.5-7b", smoke=True)
+    cfg_u = dataclasses.replace(cfg_s, scan_layers=False)
+    # same per-layer keys requires same init path — init separately and
+    # copy weights across structures
+    ps = lm_init(cfg_s, jax.random.PRNGKey(0))
+    pu = lm_init(cfg_u, jax.random.PRNGKey(0))
+    n_layers = cfg_s.n_layers
+    pu["blocks_list"] = [
+        jax.tree.map(lambda s: s[i], ps["blocks"]) for i in range(n_layers)]
+    pu["embed"] = ps["embed"]
+    pu["ln_final"] = ps["ln_final"]
+    if "lm_head" in ps:
+        pu["lm_head"] = ps["lm_head"]
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                                cfg_s.vocab)
+    l1, _ = lm_forward(cfg_s, ps, tokens)
+    l2, _ = lm_forward(cfg_u, pu, tokens)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-5,
+                               atol=2e-5)
