@@ -153,6 +153,11 @@ def select_layerwise(csc: CSC, frontier: jnp.ndarray, k: int, key: jax.Array,
     cand = jnp.take(csc.idx, jnp.clip(pos, 0, csc.idx.shape[0] - 1),
                     mode="clip")
     cand = jnp.where(valid, cand, SENTINEL).reshape(-1)  # the union array
+    # the union is a SET: a node adjacent to several frontier nodes appears
+    # once — sort + mask repeats, then draw (unique random Selecting)
+    cand = jnp.sort(cand)
+    dup = jnp.concatenate([jnp.zeros((1,), bool), cand[1:] == cand[:-1]])
+    cand = jnp.where(dup, SENTINEL, cand)
     r = jax.random.uniform(k2, cand.shape)
     r = jnp.where(cand != SENTINEL, r, 2.0)
     _, ix = jax.lax.top_k(-r, k)  # k uniform draws from the union

@@ -1,0 +1,24 @@
+"""JAX-version compatibility shims for the dist layer.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (≤0.4.x, kwarg
+``check_rep``) to ``jax.shard_map`` (≥0.5, kwarg ``check_vma``). Every
+caller in this repo goes through this wrapper with the new-style keyword
+signature so the rest of the codebase is version-agnostic.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.5
+    from jax import shard_map as _shard_map
+    _NEW_API = True
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NEW_API = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-agnostic ``shard_map`` (new-style keyword signature)."""
+    if _NEW_API:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

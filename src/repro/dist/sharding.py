@@ -1,0 +1,175 @@
+"""NamedSharding pytree builders for the launch layer.
+
+launch/steps.py turns (arch × shape × mesh) into jit-able cells; this
+module supplies the in_shardings trees. Builders pattern-match on the
+stable param-dict key names (see models/common.py) and guard every axis
+assignment on divisibility, so the same rules produce valid shardings on
+the production (16, 16) mesh, the multi-pod (2, 16, 16) mesh, and tiny
+virtual-device test meshes alike: an axis that doesn't divide its dim is
+dropped (replicated) rather than erroring.
+
+Conventions (Megatron/FSDP lineage):
+
+* ``model`` axis — tensor parallel: column-parallel on ``w_gate``/``w_in``/
+  ``wq``/``wk``/``wv`` (last dim), row-parallel on ``wo``/``w_out``
+  (contraction dim), vocab-parallel on ``embed``/``lm_head``. MoE expert
+  tensors switch to expert parallelism (expert dim over ``model``) when
+  the expert count covers the axis.
+* ``data`` axes — FSDP: the largest remaining dim of every leaf is sharded
+  over the data axes (optimizer moments inherit this via the param specs,
+  which makes the optimizer state ZeRO-sharded for free).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel axes: every mesh axis except ``model``."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return dict(mesh.shape).get("model", 1)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    shape = dict(mesh.shape)
+    n = 1
+    for a in axes:
+        n *= shape.get(a, 1)
+    return n
+
+
+def replicated(mesh: Mesh, tree):
+    """Fully-replicated NamedSharding tree matching ``tree``."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2,
+                   batch_dim: int = 0) -> NamedSharding:
+    """Batch-dim-over-dp sharding for a rank-``ndim`` array."""
+    spec = [None] * ndim
+    spec[batch_dim] = dp_axes(mesh)
+    return NamedSharding(mesh, P(*spec))
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+# ------------------------------------------------------------------- LM ----
+_COL_PARALLEL = ("wq", "wk", "wv", "bq", "bk", "bv", "w_gate", "w_in",
+                 "lm_head")
+_ROW_PARALLEL = ("wo", "w_out")
+_MOE_EXPERT = ("w_gate", "w_in", "w_out")
+
+
+def lm_param_shardings(mesh: Mesh, params, *, fsdp: bool = False,
+                       n_experts: int = 0):
+    """NamedSharding tree for an ``lm_init`` params tree (works on arrays
+    and ShapeDtypeStructs; handles scanned stacks, unrolled ``blocks_list``
+    and gemma2 local/global stacks — the leading layer axis just behaves
+    like any other candidate dim)."""
+    msz = model_axis_size(mesh)
+    dp = dp_axes(mesh)
+    dsz = _axes_size(mesh, dp)
+    expert_parallel = (n_experts and msz > 1 and n_experts % msz == 0
+                       and n_experts >= msz)
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        model_dim = None
+        if msz > 1:
+            if expert_parallel and name in _MOE_EXPERT and nd >= 3:
+                model_dim = nd - 3  # expert axis [..., E, a, b]
+            elif name in _COL_PARALLEL:
+                model_dim = nd - 1
+            elif name in _ROW_PARALLEL:
+                model_dim = nd - 2
+            elif name == "embed":
+                model_dim = nd - 2  # vocab rows
+            if model_dim is not None and shape[model_dim] % msz == 0 \
+                    and shape[model_dim] >= msz:
+                spec[model_dim] = "model"
+            else:
+                model_dim = None
+        if fsdp and dsz > 1:
+            for i in sorted((i for i in range(nd) if i != model_dim),
+                            key=lambda i: -shape[i]):
+                if shape[i] % dsz == 0 and shape[i] >= dsz:
+                    spec[i] = dp
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def lm_cache_shardings(mesh: Mesh, cache, *, seq_sharded: bool = False):
+    """KV-cache tree [L, B, Hkv, S, dh|1]: heads over ``model``; batch over
+    dp — or, for ``seq_sharded`` long-context decode (B=1), the sequence
+    over dp (flash-decoding layout; the LSE combine lives in
+    collectives.sharded_decode_attention_seq)."""
+    msz = model_axis_size(mesh)
+    dp = dp_axes(mesh)
+    dsz = _axes_size(mesh, dp)
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) == 5:
+            if msz > 1 and shape[2] % msz == 0:
+                spec[2] = "model"
+            if seq_sharded:
+                if dsz > 1 and shape[3] % dsz == 0:
+                    spec[3] = dp
+            elif dsz > 1 and shape[1] % dsz == 0:
+                spec[1] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache)
+
+
+# ----------------------------------------------------------------- DLRM ----
+def dlrm_param_shardings(mesh: Mesh, params):
+    """Stacked embedding tables [F, V, D] row-shard over ``model``
+    (embedding parallelism); the interaction MLPs are small and stay
+    replicated so serve cells pay no per-request weight collectives."""
+    msz = model_axis_size(mesh)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if _leaf_name(path) == "tables" and len(shape) == 3 \
+                and msz > 1 and shape[1] % msz == 0:
+            spec[1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ------------------------------------------------------------------ GNN ----
+def gnn_batch_shardings(mesh: Mesh, batch):
+    """GraphBatch: every leaf shards its leading (edge/node/graph) dim over
+    the dp axes when divisible — steps.py pads E and N to a multiple of 32
+    (SENTINEL edges / mask=False nodes make the padding semantically free),
+    so on production meshes this always shards."""
+    dp = dp_axes(mesh)
+    dsz = _axes_size(mesh, dp)
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if shape and dsz > 1 and shape[0] % dsz == 0:
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch)

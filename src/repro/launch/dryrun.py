@@ -150,8 +150,10 @@ def main() -> None:
             status = rec["status"]
             extra = ""
             if status == "ok":
+                # CPU backend reports no peak-memory analysis → None
                 pk = rec["memory"]["peak_bytes"]
-                extra = (f" peak={pk/1e9:.2f}GB "
+                pk = "n/a" if pk is None else f"{pk/1e9:.2f}GB"
+                extra = (f" peak={pk} "
                          f"flops={rec['cost']['flops']:.3e} "
                          f"coll={rec['collectives']['total_bytes']:.3e}B "
                          f"compile={rec['t_compile_s']}s")
