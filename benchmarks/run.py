@@ -14,7 +14,8 @@ def main() -> None:
 
     from . import (fig5_preproc_fraction, fig6_breakdown,
                    fig10_serialization, fig18_end2end, fig22_reconfig,
-                   fig24_costmodel, fig25_sensitivity, roofline)
+                   fig24_costmodel, fig25_sensitivity, fig_engine_overlap,
+                   roofline)
     suites = {
         "fig5": fig5_preproc_fraction.run,
         "fig6": fig6_breakdown.run,
@@ -23,6 +24,7 @@ def main() -> None:
         "fig22": fig22_reconfig.run,
         "fig24": fig24_costmodel.run,
         "fig25": fig25_sensitivity.run,
+        "engine": fig_engine_overlap.run,
         "roofline": roofline.run,
     }
     wanted = [a for a in sys.argv[1:] if a in suites] or list(suites)

@@ -116,10 +116,8 @@ def estimate_seconds(cfg: EngineConfig, w: Workload,
     t_order = (m * w.e) / (cal.upe_elems_per_s * cfg.n_upe)
     s = w.b * (w.k ** (w.l + 1)) - 1
     t_select = s / (cal.sel_nodes_per_s * cfg.n_upe)
-    cmp_total = max(w.n * cfg.w_scr, w.e * cfg.n_scr)  # tile coverage
     t_reshape = max(w.n / cfg.n_scr, w.e / cfg.w_scr) * (
         cfg.n_scr * cfg.w_scr / cal.scr_cmps_per_s)
-    del cmp_total
     t_reindex = (w.b * (w.k ** w.l) * (w.l + 1)) / cal.reidx_elems_per_s
     return {
         "ordering": t_order,

@@ -82,6 +82,26 @@ def _chunk_sort(keys, vals, chunk: int, key_bits: int, radix_bits: int,
     return ks.reshape(n), vs.reshape(n)
 
 
+def merge_rounds(ks: jnp.ndarray, vs: jnp.ndarray, run: int
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Binary merge tree: sorted runs of length ``run`` → one sorted array.
+
+    Shared by the single-device sorter below and the mesh-sharded sorter
+    (engine/shard.py), which continues this exact tree from its per-device
+    runs — one implementation keeps the bit-identical guarantee honest.
+    """
+    n = ks.shape[0]
+    while run < n:
+        kr = ks.reshape(-1, 2, run)
+        vr = vs.reshape(-1, 2, run)
+        ks, vs = jax.vmap(merge_sorted)(kr[:, 0], vr[:, 0], kr[:, 1],
+                                        vr[:, 1])
+        run *= 2
+        ks = ks.reshape(n)
+        vs = vs.reshape(n)
+    return ks, vs
+
+
 def stable_sort_by_key(keys: jnp.ndarray, vals: jnp.ndarray, key_bound: int,
                        chunk: int = 4096, radix_bits: int = 2,
                        map_batch: int = 4,
@@ -104,35 +124,31 @@ def stable_sort_by_key(keys: jnp.ndarray, vals: jnp.ndarray, key_bound: int,
     else:
         ks, vs = chunk_sort_fn(clipped, vals, chunk, key_bits)
 
-    run = chunk
-    while run < n:
-        kr = ks.reshape(-1, 2, run)
-        vr = vs.reshape(-1, 2, run)
-        ks, vs = jax.vmap(
-            lambda a_k, a_v, b_k, b_v: merge_sorted(a_k, a_v, b_k, b_v)
-        )(kr[:, 0], vr[:, 0], kr[:, 1], vr[:, 1])
-        run *= 2
-        ks = ks.reshape(n)
-        vs = vs.reshape(n)
-
+    ks, vs = merge_rounds(ks, vs, chunk)
     ks = jnp.where(ks >= key_bound, SENTINEL, ks)
     return ks, vs
 
 
 def edge_ordering(coo: COO, chunk: int = 4096, radix_bits: int = 2,
-                  map_batch: int = 4, chunk_sort_fn=None) -> COO:
-    """Sort edges by (dst, src): LSD = stable sort by src, then by dst."""
+                  map_batch: int = 4, chunk_sort_fn=None,
+                  sort_fn=None) -> COO:
+    """Sort edges by (dst, src): LSD = stable sort by src, then by dst.
+
+    ``sort_fn(keys, vals, key_bound) -> (keys, vals)`` overrides the global
+    stable sorter — the mesh-sharded engine passes its shard_map sorter so
+    both paths share ONE copy of the two-pass/sentinel-restore logic.
+    """
+    if sort_fn is None:
+        def sort_fn(k, v, bound):
+            return stable_sort_by_key(k, v, bound, chunk=chunk,
+                                      radix_bits=radix_bits,
+                                      map_batch=map_batch,
+                                      chunk_sort_fn=chunk_sort_fn)
     bound = coo.n_nodes
     # pass 1: by src (secondary key), dst rides along as payload
-    src1, dst1 = stable_sort_by_key(coo.src, coo.dst, bound, chunk=chunk,
-                                    radix_bits=radix_bits,
-                                    map_batch=map_batch,
-                                    chunk_sort_fn=chunk_sort_fn)
+    src1, dst1 = sort_fn(coo.src, coo.dst, bound)
     # pass 2: by dst (primary key), src rides along; stability keeps src order
-    dst2, src2 = stable_sort_by_key(dst1, src1, bound, chunk=chunk,
-                                    radix_bits=radix_bits,
-                                    map_batch=map_batch,
-                                    chunk_sort_fn=chunk_sort_fn)
+    dst2, src2 = sort_fn(dst1, src1, bound)
     # restore src sentinels (payload positions that were padding)
     src2 = jnp.where(dst2 == SENTINEL, SENTINEL, src2)
     return COO(dst=dst2, src=src2, n_edges=coo.n_edges, n_nodes=coo.n_nodes)

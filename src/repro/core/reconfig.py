@@ -1,30 +1,31 @@
 """Execution modes and dynamic reconfiguration (paper §V-B, §VI).
 
-The paper's three system variants map onto engine management policies:
+COMPATIBILITY SHIM — the engine-management implementation moved to
+``repro.engine.service`` (profiling, cost-model scoring, shape bucketing,
+module-level jit dispatch, optional mesh sharding). The paper's three
+system variants keep their names here:
 
-* ``AutoPre``  — the UPE region is statically split into an ordering-only and
-  a selection-only engine (half "resources" each; here: half lanes each).
+* ``AutoPre``  — the UPE region is statically split into an ordering-only
+  and a selection-only engine (half "resources" each; here: half lanes).
 * ``StatPre``  — one time-multiplexed engine with a fixed configuration
   (tuned for an intermediate graph, as the paper tunes for MV).
-* ``DynPre``   — StatPre + runtime reconfiguration: graph statistics are
-  profiled, the Table-I cost model scores the pre-compiled library, and the
-  engine switches configuration when the predicted gain exceeds the
-  reconfiguration cost.
+* ``DynPre``   — StatPre + runtime reconfiguration, now a thin wrapper
+  over ``PreprocService``.
 
 On TPU, "reprogramming a bitstream" = switching to a different pre-jitted
-executable. The first call per config pays XLA compilation (the analog of the
-paper's offline Vivado synthesis); subsequent switches hit the jit cache
-(the analog of bitstreams staged in DRAM, ~230 ms → ~0 here). We model the
-paper's reconfiguration latency explicitly so benchmarks can reproduce the
-Fig. 28 trade-off.
+executable. The jit cache is *module-level* (``core.pipeline.preprocess``
+is jitted once at import): the first call per (config, input shape) pays
+XLA compilation (the analog of the paper's offline Vivado synthesis);
+every later Engine/DynPre/service — including freshly constructed ones —
+hits that shared cache (the analog of bitstreams staged in DRAM,
+~230 ms → ~0 here). The shim dispatches inputs exactly as given;
+``PreprocService`` additionally pow2 shape-buckets them so the number of
+compiled programs stays bounded. We model the paper's reconfiguration
+latency explicitly so benchmarks can reproduce the Fig. 28 trade-off.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable
-
-import jax
 
 from .costmodel import (Calibration, EngineConfig, Workload, best_config,
                         bitstream_library, estimate_seconds)
@@ -42,28 +43,45 @@ class ReconfigDecision:
     reconfig_cost_s: float
 
 
+def decide(w: Workload, current: EngineConfig | None,
+           library: list[EngineConfig], cal: Calibration,
+           switch_threshold: float = 1.5,
+           reconfig_cost_s: float = RECONFIG_S_PARTIAL) -> ReconfigDecision:
+    """DynPre's decision rule: score the library, switch when the predicted
+    gain over the current configuration amortizes the reconfiguration.
+    (Shared by ``DynPre`` and ``repro.engine.service.PreprocService``.)"""
+    cand = best_config(w, library, cal)
+    if current is None:
+        return ReconfigDecision(True, cand, float("inf"), reconfig_cost_s)
+    cur = estimate_seconds(current, w, cal)["total"]
+    new = estimate_seconds(cand, w, cal)["total"]
+    gain = cur - new
+    go = cur > new * switch_threshold and gain > reconfig_cost_s * 0.1
+    return ReconfigDecision(go, cand, gain, reconfig_cost_s)
+
+
 class Engine:
     """A preprocessing engine bound to one EngineConfig.
 
-    ``fns`` maps stage name → jitted callable; building an Engine is the
-    "bitstream load". The jit cache persists across engines, so re-creating
-    an engine with a previously used config is free (paper: bitstreams staged
-    in device DRAM).
+    Dispatches to the module-level jitted ``pipeline.preprocess`` — NOT a
+    per-instance ``jax.jit`` wrapper. (The old per-``__init__`` wrapper
+    carried an empty cache, so re-creating an engine with a previously
+    used config recompiled, contradicting the staged-bitstream analogy.)
     """
 
     def __init__(self, cfg: EngineConfig, fanouts: tuple[int, ...]):
-        from . import pipeline  # late import to avoid cycles
         self.cfg = cfg
         self.fanouts = fanouts
-        self._preprocess = jax.jit(
-            pipeline.preprocess, static_argnames=("fanouts", "cfg"))
 
     def preprocess(self, coo, batch_nodes, key):
-        return self._preprocess(coo, batch_nodes, self.fanouts, key, self.cfg)
+        # drop-in compatibility: inputs dispatch exactly as given (the old
+        # Engine never padded); only PreprocService shape-buckets.
+        from repro.engine.service import preprocess_jit
+        return preprocess_jit(coo, batch_nodes, self.fanouts, key, self.cfg)
 
 
 class DynPre:
-    """Dynamic reconfiguration controller."""
+    """Dynamic reconfiguration controller (thin wrapper over the service)."""
 
     def __init__(self, fanouts: tuple[int, ...],
                  library: list[EngineConfig] | None = None,
@@ -84,16 +102,9 @@ class DynPre:
                         k=max(self.fanouts), b=batch_size)
 
     def decide(self, w: Workload) -> ReconfigDecision:
-        cand = best_config(w, self.library, self.cal)
-        if self.engine is None:
-            return ReconfigDecision(True, cand, float("inf"),
-                                    self.reconfig_cost_s)
-        cur = estimate_seconds(self.engine.cfg, w, self.cal)["total"]
-        new = estimate_seconds(cand, w, self.cal)["total"]
-        gain = cur - new
-        # switch when predicted gain amortizes the reconfiguration cost
-        go = cur > new * self.threshold and gain > self.reconfig_cost_s * 0.1
-        return ReconfigDecision(go, cand, gain, self.reconfig_cost_s)
+        current = self.engine.cfg if self.engine is not None else None
+        return decide(w, current, self.library, self.cal, self.threshold,
+                      self.reconfig_cost_s)
 
     def ensure(self, coo, batch_size: int) -> Engine:
         d = self.decide(self.profile(coo, batch_size))

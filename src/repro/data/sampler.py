@@ -1,28 +1,34 @@
-"""GNN minibatch sampler built on the AutoGNN preprocessing pipeline.
+"""GNN minibatch sampler built on the AutoGNN preprocessing engine.
 
 This is the paper's technique as a first-class framework feature: the
 training loop's batch_fn converts the graph once (Ordering + Reshaping,
-engine chosen by the DynPre cost model) and produces one sampled, reindexed
-subgraph per step (Selecting + Reindexing) — entirely on-device, one XLA
-program, no host round-trips.
+engine chosen by the service's cost model) and produces one sampled,
+reindexed subgraph per step (Selecting + Reindexing) — entirely on-device,
+one XLA program, no host round-trips.
+
+All jitted dispatches go through ``repro.engine.service``'s module-level
+entry points, so re-creating a dataset with a previously used
+(config, shape) never recompiles; ``iter_batches(prefetch=True)`` overlaps
+subgraph ``i+1`` with the model's step ``i`` (``repro.engine.prefetch``).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (COO, SENTINEL, DynPre, EngineConfig, convert,
-                        gather_features, sample_subgraph)
+from repro.core import COO, SENTINEL, EngineConfig, gather_features
+from repro.engine.prefetch import Prefetcher, SyncBatches
+from repro.engine.service import PreprocService, convert_jit, sample_jit
 from repro.models.gnn import GraphBatch
 
 
 @dataclasses.dataclass
 class SampledDataset:
-    """Graph + features + labels bound to an AutoGNN engine."""
+    """Graph + features + labels bound to the AutoGNN engine service."""
 
     coo: COO
     features: jnp.ndarray  # [N, Df]
@@ -33,15 +39,9 @@ class SampledDataset:
     seed: int = 0
 
     def __post_init__(self):
-        self.controller = DynPre(self.fanouts)
-        w = self.controller.profile(self.coo, self.batch_size)
-        d = self.controller.decide(w)
-        self.engine_cfg = d.config
-        self.csc = jax.jit(
-            partial(convert, cfg=self.engine_cfg))(self.coo)
-        self._sample = jax.jit(
-            partial(sample_subgraph, fanouts=self.fanouts,
-                    cfg=self.engine_cfg))
+        self.service = PreprocService(self.fanouts)
+        self.engine_cfg = self.service.select(self.coo, self.batch_size)
+        self.csc = convert_jit(self.coo, cfg=self.engine_cfg)
 
     def batch(self, step: int) -> GraphBatch:
         """Deterministic f(seed, step) → sampled GraphBatch."""
@@ -50,7 +50,8 @@ class SampledDataset:
         bn = jnp.asarray(rng.choice(self.coo.n_nodes, self.batch_size,
                                     replace=False).astype(np.int32))
         key = jax.random.PRNGKey(hash((self.seed, step)) & 0x7FFFFFFF)
-        sub = self._sample(self.csc, batch_nodes=bn, key=key)
+        sub = sample_jit(self.csc, bn, fanouts=self.fanouts, key=key,
+                         cfg=self.engine_cfg)
         feats = gather_features(sub, self.features)
         n_cap = sub.order.shape[0]
         safe = jnp.clip(sub.order, 0, self.labels.shape[0] - 1)
@@ -69,3 +70,17 @@ class SampledDataset:
         return GraphBatch(
             edge_dst=dst, edge_src=sub.csc.idx, node_feat=feats,
             labels=labels, label_mask=mask)
+
+    def iter_batches(self, start: int = 0, stop: int | None = None,
+                     prefetch: bool = True
+                     ) -> Iterator[tuple[int, GraphBatch]]:
+        """Iterate ``(step, batch)`` pairs; with ``prefetch`` the next
+        subgraph is sampled while the consumer holds the current one.
+
+        Both modes return a closeable iterator usable as a context
+        manager; the prefetching producer shuts down on close(), early
+        ``break`` + GC, or exhaustion — no thread leak either way.
+        """
+        if prefetch:
+            return Prefetcher(self.batch, start=start, stop=stop)
+        return SyncBatches(self.batch, start=start, stop=stop)

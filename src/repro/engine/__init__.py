@@ -1,0 +1,27 @@
+"""repro.engine — the preprocessing engine as a first-class service.
+
+The paper removes graph preprocessing from the inference critical path by
+running conversion/sampling in dedicated reconfigurable hardware while the
+accelerator computes. This package is the TPU-side equivalent, promoted out
+of ``core/`` into a subsystem that is data-parallel over the mesh and
+overlapped with model steps:
+
+* ``shard``    — mesh-sharded Ordering/Reshaping via ``shard_map`` (edge
+  chunks per device, tiled set-count), bit-identical to the single-device
+  ``core.pipeline.preprocess``.
+* ``service``  — ``PreprocService``: workload profiling, Table-I cost-model
+  scoring of the bitstream library, pow2 shape-bucketing, and dispatch to
+  one module-level jit cache keyed by ``(EngineConfig.key, bucket)``.
+* ``prefetch`` — async double-buffering: subgraph ``i+1`` is computed while
+  the model consumes subgraph ``i`` (the off-critical-path dataflow).
+
+``core/reconfig.py`` (AutoPre/StatPre/DynPre) remains as a thin
+compatibility shim over this package.
+"""
+from .prefetch import Prefetcher, SyncBatches, prefetch_batches
+from .service import (PreprocService, ServiceStats, convert_jit,
+                      preprocess_cache_size, preprocess_jit, sample_jit)
+from .shard import (jit_shard_preprocess, shard_convert, shard_pointer_array,
+                    shard_preprocess, shard_sort_by_key)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

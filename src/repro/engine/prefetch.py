@@ -1,0 +1,171 @@
+"""Async double-buffered prefetch — preprocessing off the critical path.
+
+The paper's dataflow computes the next subgraph in the preprocessing engine
+while the accelerator consumes the current one. The TPU-host analog: a
+producer thread evaluates ``batch_fn(i+1)`` (the jitted preprocessing
+program — JAX dispatch is async, so the device work for batch ``i+1``
+overlaps the model's device work for batch ``i``) and ``jax.device_put``s
+the result, feeding a one-deep queue the training loop pops from.
+
+Determinism contract: ``batch_fn(step)`` must be a pure function of the
+step index (the same contract train/loop.py already imposes for
+checkpoint/restart equivalence), so prefetching changes *when* batches are
+computed, never *what* they contain.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator
+
+import jax
+
+_DONE = object()
+
+
+def _safe_put(q: queue.Queue, stop_evt: threading.Event, item) -> bool:
+    """Queue.put that aborts (returns False) once the stop event is set,
+    so a full queue can never deadlock the producer."""
+    while not stop_evt.is_set():
+        try:
+            q.put(item, timeout=0.05)
+            return True
+        except queue.Full:
+            continue
+    return False
+
+
+def _produce(batch_fn, q: queue.Queue, stop_evt: threading.Event,
+             device_put: bool, start: int, stop: int | None) -> None:
+    """Producer loop — a module-level function on purpose: the thread must
+    NOT hold a reference to the Prefetcher, or an abandoned iterator could
+    never be garbage-collected (a live thread is a GC root) and its
+    ``__del__`` cleanup would never run."""
+    step = start
+    try:
+        while stop is None or step < stop:
+            if stop_evt.is_set():
+                return
+            batch = batch_fn(step)
+            if device_put:
+                batch = jax.device_put(batch)
+            if not _safe_put(q, stop_evt, (step, batch)):
+                return
+            step += 1
+        _safe_put(q, stop_evt, _DONE)
+    except BaseException as exc:  # noqa: BLE001 — relayed to consumer
+        _safe_put(q, stop_evt, ("__prefetch_error__", exc))
+
+
+class Prefetcher:
+    """Iterator over ``(step, batch)`` with a background producer thread.
+
+    ``depth`` bounds the lookahead (1 = classic double buffer: the producer
+    works on batch ``i+1`` while the consumer holds batch ``i``).
+    """
+
+    def __init__(self, batch_fn: Callable[[int], Any], start: int = 0,
+                 stop: int | None = None, depth: int = 1,
+                 device_put: bool = True):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop_evt = threading.Event()
+        self._thread = threading.Thread(
+            target=_produce,
+            args=(batch_fn, self._q, self._stop_evt, device_put, start,
+                  stop),
+            daemon=True, name="repro-prefetch")
+        self._thread.start()
+
+    def __iter__(self) -> "Prefetcher":
+        return self
+
+    def __next__(self) -> tuple[int, Any]:
+        if self._stop_evt.is_set():
+            raise StopIteration
+        item = self._q.get()
+        if item is _DONE:
+            self._stop_evt.set()  # sticky: every later next() stops too
+            raise StopIteration
+        if isinstance(item, tuple) and len(item) == 2 \
+                and item[0] == "__prefetch_error__":
+            self.close()
+            raise item[1]
+        return item
+
+    def close(self) -> None:
+        """Stop the producer and release the thread (idempotent; safe to
+        call on a partially constructed instance from ``__del__``)."""
+        evt = getattr(self, "_stop_evt", None)
+        if evt is None:
+            return
+        evt.set()
+
+        def drain():
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+
+        drain()  # unblock a producer waiting on a full queue
+        thread = getattr(self, "_thread", None)
+        if thread is not None and thread.is_alive():
+            thread.join(timeout=5.0)
+        drain()  # a put in flight during the first drain may have landed
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        # abandoning the iterator (early break, no close()) must not leak
+        # the producer thread or the device-resident queued batch
+        self.close()
+
+
+class SyncBatches:
+    """Synchronous twin of ``Prefetcher``: same ``(step, batch)`` iterator
+    and context-manager protocol, no producer thread. Lets callers switch
+    overlap on/off without changing their iteration code."""
+
+    def __init__(self, batch_fn: Callable[[int], Any], start: int = 0,
+                 stop: int | None = None):
+        self._batch_fn = batch_fn
+        self._step = start
+        self._stop = stop
+
+    def __iter__(self) -> "SyncBatches":
+        return self
+
+    def __next__(self) -> tuple[int, Any]:
+        if self._stop is not None and self._step >= self._stop:
+            raise StopIteration
+        step = self._step
+        self._step += 1
+        return step, self._batch_fn(step)
+
+    def close(self) -> None:
+        self._stop = self._step
+
+    def __enter__(self) -> "SyncBatches":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def prefetch_batches(batch_fn: Callable[[int], Any], start: int = 0,
+                     stop: int | None = None, depth: int = 1,
+                     device_put: bool = True) -> Iterator[tuple[int, Any]]:
+    """Generator form: yields ``(step, batch)`` in step order, producer
+    always one batch ahead; closes the producer on generator exit."""
+    pf = Prefetcher(batch_fn, start=start, stop=stop, depth=depth,
+                    device_put=device_put)
+    try:
+        yield from pf
+    finally:
+        pf.close()

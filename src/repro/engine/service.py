@@ -1,0 +1,162 @@
+"""PreprocService — the preprocessing engine front-end.
+
+Subsumes ``core/reconfig.py``'s Engine/DynPre with one service object that
+does what the paper's runtime does end to end:
+
+1. **profile** the workload (<0.1 ms host-side graph metadata capture),
+2. **score** the pre-compiled bitstream library with the Table-I cost model
+   and switch configurations when the predicted gain amortizes the
+   reconfiguration cost,
+3. **shape-bucket** inputs to power-of-two capacities so the number of
+   distinct compiled programs stays O(log(max_e) · log(max_b) · |library|),
+4. **dispatch** to a *module-level* jit cache keyed by
+   ``(EngineConfig.key, bucket)`` — the bitstreams-staged-in-DRAM analog.
+
+The module-level entry points matter: ``core.pipeline.preprocess`` is
+jitted once at import, so every service (and every legacy ``Engine`` shim)
+shares one compilation cache. Re-selecting a previously used
+``(config, bucket)`` pair therefore performs **zero** recompiles — asserted
+via ``preprocess_cache_size()`` in tests/test_engine_service.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline
+from repro.core.costmodel import (Calibration, EngineConfig, Workload,
+                                  bitstream_library)
+from repro.core.graph import COO, SENTINEL, next_pow2, pad_to
+from repro.core.reconfig import (RECONFIG_S_PARTIAL, ReconfigDecision,
+                                 decide)
+
+
+# ---------------------------------------------------------------------------
+# Module-level jitted entry points (ONE cache per process, not per object).
+# ---------------------------------------------------------------------------
+# ``pipeline.preprocess`` is itself the module-level jitted program; the
+# aliases below are the service's dispatch table. ``sample_jit`` / ``convert_jit``
+# cover consumers that convert once and sample per step (data/sampler.py).
+preprocess_jit = pipeline.preprocess
+sample_jit = jax.jit(pipeline.sample_subgraph, static_argnames=("fanouts",
+                                                                "cfg"))
+convert_jit = jax.jit(pipeline.convert, static_argnames=("cfg",))
+
+
+def preprocess_cache_size() -> int:
+    """Number of compiled programs behind the module-level preprocess entry
+    (the compile-counter tests assert against)."""
+    try:
+        return int(preprocess_jit._cache_size())
+    except AttributeError as e:  # private PjitFunction API (jax upgrade?)
+        raise NotImplementedError(
+            "jax.jit cache introspection (_cache_size) is unavailable on "
+            "this JAX version — update preprocess_cache_size() to the new "
+            "API") from e
+
+
+def bucket_coo(coo: COO) -> COO:
+    """Pad the edge buffer to its pow2 capacity bucket (SENTINEL tail)."""
+    cap = next_pow2(coo.capacity)
+    if cap == coo.capacity:
+        return coo
+    return COO(dst=pad_to(coo.dst, cap, SENTINEL),
+               src=pad_to(coo.src, cap, SENTINEL),
+               n_edges=coo.n_edges, n_nodes=coo.n_nodes)
+
+
+def bucket_batch(batch_nodes: jnp.ndarray) -> jnp.ndarray:
+    """Pad the seed-node list to its pow2 bucket with SENTINEL (sentinel
+    seeds have degree 0 and never claim new VIDs, so real batch nodes keep
+    the first new VIDs exactly as with the unpadded batch)."""
+    cap = next_pow2(batch_nodes.shape[0])
+    if cap == batch_nodes.shape[0]:
+        return batch_nodes
+    return pad_to(batch_nodes, cap, SENTINEL)
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    n_dispatches: int = 0
+    n_reconfigs: int = 0
+    n_unique_keys: int = 0  # distinct (EngineConfig.key, bucket) pairs
+
+
+class PreprocService:
+    """The preprocessing engine as a long-lived service.
+
+    One service instance per workload stream; all instances share the
+    module-level jit caches. When constructed with a ``mesh`` whose dp
+    extent is > 1, dispatches route through the sharded engine
+    (``engine.shard``); otherwise through the single-device pipeline.
+    """
+
+    def __init__(self, fanouts: tuple[int, ...],
+                 library: list[EngineConfig] | None = None,
+                 cal: Calibration | None = None,
+                 mesh=None,
+                 switch_threshold: float = 1.5,
+                 reconfig_cost_s: float = RECONFIG_S_PARTIAL):
+        self.fanouts = tuple(fanouts)
+        self.library = library or bitstream_library()
+        self.cal = cal or Calibration()
+        self.mesh = mesh
+        self.threshold = switch_threshold
+        self.reconfig_cost_s = reconfig_cost_s
+        self.active_cfg: EngineConfig | None = None
+        self.stats = ServiceStats()
+        self._keys_seen: set[tuple[str, tuple[int, int]]] = set()
+
+    # ------------------------------------------------------------- profiling
+    def profile(self, coo: COO, batch_size: int,
+                bucketed: bool = False) -> Workload:
+        """Light-weight graph metadata capture (paper: <0.1 ms host-side).
+
+        ``bucketed`` scores the pow2 capacity bucket instead of the exact
+        edge count, making the selected config a pure function of the
+        bucket — that is what bounds the number of compiled programs to
+        O(log(max_e) · log(max_b)): every graph in a bucket re-selects the
+        same ``(EngineConfig.key, bucket)`` pair and hits the jit cache.
+        """
+        e = next_pow2(coo.capacity) if bucketed else int(coo.n_edges)
+        return Workload(n=coo.n_nodes, e=e, l=len(self.fanouts),
+                        k=max(self.fanouts), b=batch_size)
+
+    def decide(self, w: Workload) -> ReconfigDecision:
+        return decide(w, self.active_cfg, self.library, self.cal,
+                      self.threshold, self.reconfig_cost_s)
+
+    def select(self, coo: COO, batch_size: int) -> EngineConfig:
+        """Profile + score; switch the active configuration if warranted."""
+        d = self.decide(self.profile(coo, batch_size, bucketed=True))
+        if d.reconfigure or self.active_cfg is None:
+            self.active_cfg = d.config
+            self.stats.n_reconfigs += 1
+        return self.active_cfg
+
+    # ------------------------------------------------------------- dispatch
+    def _dp_size(self) -> int:
+        from .shard import _dp
+        return _dp(self.mesh)[1]
+
+    def preprocess(self, coo: COO, batch_nodes: jnp.ndarray, key: jax.Array,
+                   cfg: EngineConfig | None = None):
+        """Bucket, select, dispatch. Returns the sampled ``Subgraph``."""
+        coo_b = bucket_coo(coo)
+        bn_b = bucket_batch(jnp.asarray(batch_nodes, jnp.int32))
+        cfg = cfg or self.select(coo_b, int(bn_b.shape[0]))
+        bucket = (coo_b.capacity, int(bn_b.shape[0]))
+        self.stats.n_dispatches += 1
+        self._keys_seen.add((cfg.key, bucket))
+        self.stats.n_unique_keys = len(self._keys_seen)
+        if self._dp_size() > 1:
+            from .shard import jit_shard_preprocess
+            return jit_shard_preprocess(self.mesh)(
+                coo_b, bn_b, fanouts=self.fanouts, key=key, cfg=cfg)
+        return preprocess_jit(coo_b, bn_b, self.fanouts, key, cfg)
+
+    @staticmethod
+    def cache_size() -> int:
+        return preprocess_cache_size()

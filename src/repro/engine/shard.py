@@ -1,0 +1,182 @@
+"""Mesh-sharded preprocessing: data-parallel Ordering + tiled Reshaping.
+
+The paper's UPE region processes edge chunks in parallel lanes; on a TPU
+mesh the lanes *are* the devices. This module shards the preprocessing
+pipeline over the data-parallel mesh axes with explicit ``shard_map``:
+
+* **Ordering** — the padded COO edge buffer is split into one contiguous
+  span per dp device. Each device runs the chunked LSD radix sort plus its
+  local merge rounds (one sorted run per device), then ``log2(n_dev)``
+  cross-device merge rounds complete the global sort. A stable sort has a
+  canonical output — every merge-tree refinement yields the same (key, val)
+  arrays — so the result is *bit-identical* to the single-device
+  ``core.ordering.edge_ordering`` regardless of how chunks map to devices.
+* **Reshaping** — the pointer array is a tiled set-count: the target VID
+  range is sharded over devices and each shard ranks its targets against
+  the (replicated) sorted dst stream. ``rank_in_sorted`` is an independent
+  log-depth binary search per target, so sharded == single-device exactly.
+* **Selecting/Reindexing** operate on the sampled subgraph (batch-sized,
+  not graph-sized) and reuse ``core.pipeline.sample_subgraph`` unchanged.
+
+``shard_preprocess`` therefore returns bit-identical ``Subgraph``s to
+``pipeline.preprocess`` for the same inputs — tested on an 8-virtual-device
+mesh in tests/test_engine_shard.py.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.costmodel import EngineConfig
+from repro.core.graph import COO, CSC, SENTINEL, Subgraph
+from repro.core.ordering import (_bits_for, _chunk_sort, edge_ordering,
+                                 merge_rounds, stable_sort_by_key)
+from repro.core.pipeline import preprocess as _preprocess_single
+from repro.core.pipeline import sample_subgraph
+from repro.core.set_count import rank_in_sorted
+from repro.dist.compat import shard_map
+from repro.dist.sharding import _axes_size, dp_axes
+
+
+def _dp(mesh: Mesh | None) -> tuple[tuple[str, ...], int]:
+    if mesh is None:
+        return (), 1
+    dp = dp_axes(mesh)
+    return dp, _axes_size(mesh, dp)
+
+
+def shard_sort_by_key(mesh: Mesh, keys: jnp.ndarray, vals: jnp.ndarray,
+                      key_bound: int, chunk: int = 4096,
+                      radix_bits: int = 2, map_batch: int = 0,
+                      chunk_sort_fn=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Global stable sort with the chunk-sort stage sharded over devices.
+
+    Each dp shard owns ``n / n_dev`` contiguous elements, chunk-radix-sorts
+    them (all lanes vmapped — on the sharded path the devices ARE the
+    lanes) and merges locally to one run; the remaining ``log2(n_dev)``
+    merge rounds run on the global arrays (GSPMD collectives).
+    ``chunk_sort_fn`` swaps in the Pallas UPE kernel, same contract as
+    ``core.ordering.stable_sort_by_key``. Falls back to the single-device
+    sorter — honoring ``map_batch`` (the UPE lane bound) there — when the
+    mesh has no dp extent or the buffer does not divide.
+    """
+    n = keys.shape[0]
+    dp, nd = _dp(mesh)
+    # the merge tree needs pow2 run counts: device count AND local span
+    if nd <= 1 or nd & (nd - 1) or n % nd or (n // nd) & (n // nd - 1):
+        return stable_sort_by_key(keys, vals, key_bound, chunk=min(chunk, n),
+                                  radix_bits=radix_bits,
+                                  map_batch=map_batch,
+                                  chunk_sort_fn=chunk_sort_fn)
+    local = n // nd
+    chunk = min(chunk, local)
+    key_bits = _bits_for(key_bound)
+    clipped = jnp.minimum(keys, jnp.int32(key_bound))
+
+    def local_run(k_l, v_l):
+        if chunk_sort_fn is None:
+            ks, vs = _chunk_sort(k_l, v_l, chunk, key_bits, radix_bits,
+                                 map_batch=0)
+        else:
+            ks, vs = chunk_sort_fn(k_l, v_l, chunk, key_bits)
+        return merge_rounds(ks, vs, chunk)
+
+    fn = shard_map(local_run, mesh=mesh, in_specs=(P(dp), P(dp)),
+                   out_specs=(P(dp), P(dp)), check_vma=False)
+    ks, vs = fn(clipped, vals)
+    ks, vs = merge_rounds(ks, vs, local)
+    ks = jnp.where(ks >= key_bound, SENTINEL, ks)
+    return ks, vs
+
+
+def _kernel_fns(cfg: EngineConfig):
+    """(chunk_sort_fn, count_fn) for ``cfg`` — the same Pallas UPE/SCR
+    routing rule as ``core.pipeline.convert``, so the sharded engine honors
+    ``use_pallas`` instead of silently dropping it."""
+    if not cfg.use_pallas:
+        return None, None
+    from repro.kernels import ops as _kops
+    return _kops.pallas_chunk_sort_fn, _kops.pallas_count_fn
+
+
+def shard_edge_ordering(mesh: Mesh, coo: COO,
+                        cfg: EngineConfig | None = None) -> COO:
+    """Sharded edge Ordering: ``core.ordering.edge_ordering``'s two-pass
+    LSD scheme with the global sorter swapped for the shard_map one."""
+    cfg = cfg or EngineConfig()
+    chunk_sort_fn, _ = _kernel_fns(cfg)
+
+    def sort_fn(k, v, bound):
+        return shard_sort_by_key(mesh, k, v, bound, chunk=cfg.w_upe,
+                                 map_batch=cfg.n_upe,
+                                 chunk_sort_fn=chunk_sort_fn)
+
+    return edge_ordering(coo, sort_fn=sort_fn)
+
+
+def shard_pointer_array(mesh: Mesh, sorted_dst: jnp.ndarray,
+                        n_nodes: int, count_fn=None) -> jnp.ndarray:
+    """Sharded Reshaping: ptr[v] = rank of v in the sorted dst stream, the
+    target range tiled over devices (each shard one SCR tile row-block).
+    ``count_fn`` swaps in the Pallas SCR kernel (same contract as
+    ``core.reshaping.build_pointer_array``)."""
+    dp, nd = _dp(mesh)
+    targets = jnp.arange(n_nodes + 1, dtype=jnp.int32)
+    if nd <= 1:
+        if count_fn is not None:
+            return count_fn(sorted_dst, targets)
+        return rank_in_sorted(sorted_dst, targets, side="left")
+    pad = (-(n_nodes + 1)) % nd
+    t_pad = jnp.pad(targets, (0, pad), constant_values=n_nodes)
+
+    def tile(dst_full, t_l):
+        if count_fn is not None:
+            return count_fn(dst_full, t_l)
+        return rank_in_sorted(dst_full, t_l, side="left")
+
+    fn = shard_map(tile, mesh=mesh, in_specs=(P(), P(dp)), out_specs=P(dp),
+                   check_vma=False)
+    return fn(sorted_dst, t_pad)[:n_nodes + 1]
+
+
+def shard_convert(mesh: Mesh, coo: COO,
+                  cfg: EngineConfig | None = None) -> CSC:
+    """Sharded graph conversion: Ordering + Reshaping over the dp axes."""
+    cfg = cfg or EngineConfig()
+    _, count_fn = _kernel_fns(cfg)
+    sorted_coo = shard_edge_ordering(mesh, coo, cfg)
+    ptr = shard_pointer_array(mesh, sorted_coo.dst, coo.n_nodes,
+                              count_fn=count_fn)
+    return CSC(ptr=ptr, idx=sorted_coo.src, n_edges=coo.n_edges,
+               n_nodes=coo.n_nodes)
+
+
+def shard_preprocess(mesh: Mesh, coo: COO, batch_nodes: jnp.ndarray,
+                     fanouts: tuple[int, ...], key: jax.Array,
+                     cfg: EngineConfig = EngineConfig()) -> Subgraph:
+    """The full AutoGNN workflow with conversion sharded over the mesh.
+
+    Bit-identical to ``pipeline.preprocess(coo, batch_nodes, fanouts, key,
+    cfg)``: the sharded sort/rank stages produce the exact same CSC, and
+    Selecting/Reindexing run the identical program on it. Falls back to the
+    single-device pipeline when the mesh cannot shard this buffer.
+    """
+    _, nd = _dp(mesh)
+    if nd <= 1 or coo.capacity % nd:
+        return _preprocess_single(coo, batch_nodes, fanouts, key, cfg)
+    csc = shard_convert(mesh, coo, cfg)
+    return sample_subgraph(csc, batch_nodes, fanouts, key, cfg)
+
+
+@lru_cache(maxsize=None)
+def jit_shard_preprocess(mesh: Mesh):
+    """Per-mesh jitted entry point for ``shard_preprocess``.
+
+    Cached on the mesh so repeated service dispatches hit one jit wrapper
+    (the sharded analog of the module-level single-device cache).
+    """
+    return jax.jit(partial(shard_preprocess, mesh),
+                   static_argnames=("fanouts", "cfg"))

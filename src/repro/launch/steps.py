@@ -17,6 +17,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES, get_arch, \
     get_config
+from repro.dist.collectives import seq_sharded_decode_attn_fn
 from repro.dist.sharding import (batch_sharding, dlrm_param_shardings,
                                  dp_axes, gnn_batch_shardings,
                                  lm_cache_shardings, lm_param_shardings,
@@ -137,15 +138,20 @@ def _lm_cell(arch_id: str, shape_name: str, mesh: Mesh) -> Cell:
     pos = SDS((), jnp.int32)
     pos_shard = NamedSharding(mesh, P())
 
+    # long_500k: route cache attention through the sequence-sharded
+    # LSE-combine collective so decode reads only the local cache shard.
+    attn = seq_sharded_decode_attn_fn(mesh) if seq_sharded else None
+
     def decode_step(params, cache, tokens, pos):
-        return lm_decode_step(cfg, params, cache, tokens, pos)
+        return lm_decode_step(cfg, params, cache, tokens, pos, attn_fn=attn)
 
     return Cell(arch_id, shape_name, decode_step,
                 (params_shape, cache_shape, tokens, pos),
                 (p_shard, c_shard, t_shard, pos_shard),
                 donate_argnums=(1,),
                 note="serve_step (decode)"
-                + (", sequence-sharded KV" if seq_sharded else ""))
+                + (", sequence-sharded KV (LSE-combined decode collective)"
+                   if seq_sharded else ""))
 
 
 # ================================================================= GNN cells
@@ -295,16 +301,19 @@ def _recsys_cell(arch_id: str, shape_name: str, mesh: Mesh) -> Cell:
 
 # ===================================================== paper-technique cells
 def preprocess_cells(mesh: Mesh) -> list[Cell]:
-    """The AutoGNN pipeline itself as dry-run cells (beyond the 40):
+    """The AutoGNN engine itself as dry-run cells (beyond the 40):
 
-    * autognn-convert / reddit: distributed COO→CSC conversion, edges
-      sharded over the data axes (chunk sorts local, merges via collectives)
+    * autognn-convert / reddit: distributed COO→CSC conversion through
+      ``engine.shard.shard_convert`` — per-device chunk sorts under
+      shard_map, cross-device merge rounds, tiled pointer set-count
     * autognn-sample / reddit-minibatch: Selecting+Reindexing with the graph
       replicated and batch nodes sharded — DGL-style data-parallel sampling
+    * autognn-preprocess / reddit-e2e: the full sharded workflow
+      (``engine.shard.shard_preprocess``) — convert + sample as one program
     """
     from repro.core import COO, CSC, EngineConfig, sample_subgraph
-    from repro.core.pipeline import convert
     from repro.core.graph import next_pow2
+    from repro.engine.shard import shard_convert, shard_preprocess
 
     dp = dp_axes(mesh)
     n, e = 232965, 114615892
@@ -319,11 +328,12 @@ def preprocess_cells(mesh: Mesh) -> list[Cell]:
     ecfg = EngineConfig(w_upe=8192, n_upe=0)  # n_upe=0 → full vmap lanes
 
     def convert_step(coo):
-        return convert(coo, ecfg)
+        return shard_convert(mesh, coo, ecfg)
 
     cells.append(Cell("autognn-convert", "reddit", convert_step,
                       (coo_spec,), (coo_shard,),
-                      note="COO→CSC conversion, edges sharded over dp"))
+                      note="COO→CSC conversion, edges sharded over dp "
+                           "(engine.shard)"))
 
     csc_spec = CSC(ptr=SDS((n + 1,), jnp.int32), idx=SDS((cap,), jnp.int32),
                    n_edges=SDS((), jnp.int32), n_nodes=n)
@@ -342,6 +352,14 @@ def preprocess_cells(mesh: Mesh) -> list[Cell]:
                       (csc_spec, bn, key_spec),
                       (csc_shard, bn_shard, key_shard),
                       note="Selecting+Reindexing, batch sharded over dp"))
+
+    def e2e_step(coo, batch_nodes, key):
+        return shard_preprocess(mesh, coo, batch_nodes, (15, 10), key, ecfg)
+
+    cells.append(Cell("autognn-preprocess", "reddit-e2e", e2e_step,
+                      (coo_spec, bn, key_spec),
+                      (coo_shard, bn_shard, key_shard),
+                      note="full sharded preprocess workflow (engine.shard)"))
     return cells
 
 

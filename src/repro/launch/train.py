@@ -67,8 +67,10 @@ def run_gnn(arch: str, steps: int, smoke: bool, ckpt_dir: str,
     opt_cfg = AdamWConfig(lr=1e-3)
     opt = adamw_init(params)
     step_fn = _train_step_factory(loss_fn, opt_cfg)
+    # prefetch: the engine samples subgraph i+1 while the model runs step i
+    # (batch_fn is pure in step, so restart determinism is unchanged)
     loop_cfg = LoopConfig(total_steps=steps, ckpt_every=max(steps // 4, 10),
-                          ckpt_dir=ckpt_dir)
+                          ckpt_dir=ckpt_dir, prefetch=True)
     inj = FailureInjector(fail_at)
     return train(loop_cfg, step_fn, params, opt, ds.batch, failure=inj)
 

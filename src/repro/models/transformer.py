@@ -304,8 +304,13 @@ def _cache_insert(cfg: LMConfig, layer_cache, k, v, pos):
 
 
 def _decode_block(cfg: LMConfig, p: Params, x, layer_cache, pos, *,
-                  window=None):
-    """One-token decode through one block. x [B,1,d]."""
+                  window=None, attn_fn=None):
+    """One-token decode through one block. x [B,1,d].
+
+    ``attn_fn`` overrides the dense cache attention — the launch layer
+    injects ``dist.collectives.seq_sharded_decode_attn_fn`` here for
+    long-context (sequence-sharded KV) decode cells.
+    """
     b = x.shape[0]
     dh = cfg.dh
     z = rms_norm(x, p["ln_attn"], zero_centered=cfg.norm_zero_centered)
@@ -324,7 +329,7 @@ def _decode_block(cfg: LMConfig, p: Params, x, layer_cache, pos, *,
     cache_len = jnp.full((b,), pos + 1, jnp.int32)
     length = new_cache["k"].shape[-2]
     eff_len = jnp.minimum(cache_len, length)  # ring buffer truncation
-    o = decode_attention(
+    o = (attn_fn or decode_attention)(
         q, new_cache["k"], new_cache["v"], eff_len,
         window=None,  # window already enforced by ring-buffer extent
         logit_cap=cfg.attn_logit_cap,
@@ -348,11 +353,12 @@ def _decode_block(cfg: LMConfig, p: Params, x, layer_cache, pos, *,
 
 
 def lm_decode_step(cfg: LMConfig, params: Params, cache: Params,
-                   tokens: jnp.ndarray, pos: jnp.ndarray
-                   ) -> tuple[jnp.ndarray, Params]:
+                   tokens: jnp.ndarray, pos: jnp.ndarray, *,
+                   attn_fn=None) -> tuple[jnp.ndarray, Params]:
     """One greedy decode step. tokens [B,1] int32; pos scalar int32.
 
-    Returns (next_token [B,1], updated cache).
+    Returns (next_token [B,1], updated cache). ``attn_fn`` is threaded to
+    every block's cache attention (see ``_decode_block``).
     """
     b = tokens.shape[0]
     x = jnp.take(params["embed"], tokens[:, 0], axis=0)[:, None, :].astype(
@@ -363,8 +369,8 @@ def lm_decode_step(cfg: LMConfig, params: Params, cache: Params,
     if cfg.local_global:
         def pair(x, xs):
             pl_, pg, cl, cg = xs
-            x, ncl = _decode_block(cfg, pl_, x, cl, pos)
-            x, ncg = _decode_block(cfg, pg, x, cg, pos)
+            x, ncl = _decode_block(cfg, pl_, x, cl, pos, attn_fn=attn_fn)
+            x, ncg = _decode_block(cfg, pg, x, cg, pos, attn_fn=attn_fn)
             return x, (ncl, ncg)
         x, (ncl, ncg) = jax.lax.scan(
             pair, x, (params["local"], params["global"],
@@ -374,14 +380,14 @@ def lm_decode_step(cfg: LMConfig, params: Params, cache: Params,
         slices = []
         for i, pb in enumerate(params["blocks_list"]):
             cb = jax.tree.map(lambda c: c[i], cache["blocks"])
-            x, ncb = _decode_block(cfg, pb, x, cb, pos)
+            x, ncb = _decode_block(cfg, pb, x, cb, pos, attn_fn=attn_fn)
             slices.append(ncb)
         new_cache = {"blocks": jax.tree.map(
             lambda *xs: jnp.stack(xs), *slices)}
     else:
         def one(x, xs):
             pb, cb = xs
-            x, ncb = _decode_block(cfg, pb, x, cb, pos)
+            x, ncb = _decode_block(cfg, pb, x, cb, pos, attn_fn=attn_fn)
             return x, ncb
         x, ncb = jax.lax.scan(one, x, (params["blocks"], cache["blocks"]))
         new_cache = {"blocks": ncb}

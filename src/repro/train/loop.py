@@ -34,6 +34,10 @@ class LoopConfig:
     keep: int = 3
     log_every: int = 10
     step_timeout_s: float | None = None  # straggler watchdog
+    # double-buffer batches (repro.engine.prefetch): batch i+1 is computed
+    # while step i runs — safe because batch_fn(step) is pure, so restart
+    # determinism is unchanged.
+    prefetch: bool = False
 
 
 class FailureInjector:
@@ -65,24 +69,42 @@ def train(cfg: LoopConfig, step_fn: Callable, params, opt_state,
                 cfg.ckpt_dir, latest, (params, opt_state))
             start_step = meta["step"]
 
+    prefetcher = None
+    if cfg.prefetch:
+        from repro.engine.prefetch import Prefetcher
+        prefetcher = Prefetcher(batch_fn, start=start_step,
+                                stop=cfg.total_steps)
+
     history: list[dict] = []
-    for step in range(start_step, cfg.total_steps):
-        if failure is not None:
-            failure.maybe_fail(step)
-        t0 = time.time()
-        batch = batch_fn(step)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        if cfg.step_timeout_s is not None:
-            jax.block_until_ready(metrics)
-            dt = time.time() - t0
-            if dt > cfg.step_timeout_s:
-                raise TimeoutError(
-                    f"step {step} took {dt:.1f}s > {cfg.step_timeout_s}s — "
-                    "straggler watchdog (launcher restarts from last commit)")
-        if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
-            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
-            history.append({"step": step, **m})
-        if (step + 1) % cfg.ckpt_every == 0 or step == cfg.total_steps - 1:
-            ckpt.save(cfg.ckpt_dir, step + 1, (params, opt_state),
-                      keep=cfg.keep)
+    try:
+        for step in range(start_step, cfg.total_steps):
+            if failure is not None:
+                failure.maybe_fail(step)
+            t0 = time.time()
+            if prefetcher is not None:
+                got_step, batch = next(prefetcher)
+                if got_step != step:  # must survive python -O: data order
+                    raise RuntimeError(  # is the restart-determinism core
+                        f"prefetcher yielded step {got_step}, loop expected "
+                        f"{step}")
+            else:
+                batch = batch_fn(step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if cfg.step_timeout_s is not None:
+                jax.block_until_ready(metrics)
+                dt = time.time() - t0
+                if dt > cfg.step_timeout_s:
+                    raise TimeoutError(
+                        f"step {step} took {dt:.1f}s > {cfg.step_timeout_s}s "
+                        "— straggler watchdog (launcher restarts from last "
+                        "commit)")
+            if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
+                m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                history.append({"step": step, **m})
+            if (step + 1) % cfg.ckpt_every == 0 or step == cfg.total_steps - 1:
+                ckpt.save(cfg.ckpt_dir, step + 1, (params, opt_state),
+                          keep=cfg.keep)
+    finally:
+        if prefetcher is not None:
+            prefetcher.close()
     return params, opt_state, history

@@ -1,24 +1,7 @@
 """Distribution tests under 8 virtual devices (subprocess: device count must
-be set before jax initializes, and the main test process must keep 1)."""
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_under_devices(code: str, n: int = 8) -> str:
-    env = {**os.environ,
-           "XLA_FLAGS": f"--xla_force_host_platform_device_count={n}",
-           "PYTHONPATH": os.path.join(ROOT, "src")}
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, env=env, cwd=ROOT,
-                       timeout=600)
-    assert r.returncode == 0, r.stdout + "\n" + r.stderr
-    return r.stdout
+be set before jax initializes, and the main test process must keep 1 —
+shared harness in tests/conftest.py)."""
+from conftest import run_under_devices
 
 
 def test_sharded_decode_matches_unsharded():
@@ -63,6 +46,96 @@ def test_seq_sharded_decode_matches_unsharded():
                 mesh, q, kc, vc, c))(q, kc, vc, clen)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=2e-5, atol=2e-5)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_seq_sharded_decode_heads_on_model_axis_with_int8():
+    """(data, model) mesh: KV heads stay sharded over 'model' (no cache
+    replication) and int8 scales dequantize per shard — output still
+    matches the dense reference."""
+    out = run_under_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        from repro.dist.collectives import sharded_decode_attention_seq
+        from repro.models.attention import decode_attention, quantize_kv
+        b, h, hkv, s, dh = 2, 8, 4, 128, 16
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+        q = jax.random.normal(k1, (b, h, 1, dh))
+        kc = jax.random.normal(k2, (b, hkv, s, dh))
+        vc = jax.random.normal(k3, (b, hkv, s, dh))
+        kq, ks = quantize_kv(kc)
+        vq, vs = quantize_kv(vc)
+        clen = jnp.array([100, 17], jnp.int32)
+        want = decode_attention(q, kq, vq, clen, k_scale=ks, v_scale=vs)
+        with mesh:
+            got = jax.jit(lambda *a: sharded_decode_attention_seq(
+                mesh, *a[:4], k_scale=a[4], v_scale=a[5]))(
+                q, kq, vq, clen, ks, vs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_long_context_decode_step_with_seq_sharded_attn():
+    """The long_500k wiring: lm_decode_step with the sequence-sharded
+    LSE-combine attn_fn matches the dense decode step exactly (gemma2-class
+    local/global config, B=1, cache sharded over 8 devices)."""
+    out = run_under_devices("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        mesh = jax.make_mesh((8,), ("data",))
+        from repro.configs import get_config
+        from repro.dist.collectives import seq_sharded_decode_attn_fn
+        from repro.dist.sharding import lm_cache_shardings
+        from repro.models.transformer import (lm_decode_step, lm_init,
+                                              make_cache)
+        cfg = get_config("gemma2-9b", smoke=True).padded(1)
+        params = lm_init(cfg, jax.random.PRNGKey(0))
+        cache = make_cache(cfg, 1, 128)
+        # a mid-stream position: the valid prefix straddles shard boundaries
+        tok = jnp.array([[7]], jnp.int32)
+        pos = jnp.int32(77)
+        want_tok, want_cache = jax.jit(
+            lambda p, c, t, q: lm_decode_step(cfg, p, c, t, q)
+        )(params, cache, tok, pos)
+        attn = seq_sharded_decode_attn_fn(mesh)
+        with mesh:
+            c_sh = lm_cache_shardings(mesh, cache, seq_sharded=True)
+            cache_s = jax.device_put(cache, c_sh)
+            got_tok, got_cache = jax.jit(
+                lambda p, c, t, q: lm_decode_step(cfg, p, c, t, q,
+                                                  attn_fn=attn)
+            )(params, cache_s, tok, pos)
+        np.testing.assert_array_equal(np.asarray(got_tok),
+                                      np.asarray(want_tok))
+        for a, b in zip(jax.tree.leaves(got_cache),
+                        jax.tree.leaves(want_cache)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-5, atol=2e-5)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_long500k_cell_wires_seq_sharded_collective():
+    """build_cell(gemma2-9b, long_500k) must construct the sequence-sharded
+    decode cell (LSE-combine collective) with consistent spec trees."""
+    out = run_under_devices("""
+        import jax
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        from repro.launch.steps import build_cell
+        cell = build_cell("gemma2-9b", "long_500k", mesh)
+        assert not cell.skipped, cell.skipped
+        assert "sequence-sharded" in cell.note, cell.note
+        assert "LSE-combined" in cell.note, cell.note
+        ta = jax.tree.structure(cell.args)
+        ts = jax.tree.structure(cell.in_shardings)
+        assert ta == ts, (ta, ts)
         print("OK")
     """)
     assert "OK" in out

@@ -1,0 +1,159 @@
+"""Prefetch double-buffering: batch-order correctness, error relay, and
+train-loop / sampler integration (determinism unchanged by overlap)."""
+import shutil
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import COO, random_coo
+from repro.data.sampler import SampledDataset
+from repro.engine.prefetch import Prefetcher, prefetch_batches
+from repro.train.loop import LoopConfig, train
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------------ ordering
+def test_prefetch_yields_batches_in_step_order():
+    with Prefetcher(lambda s: s * 10, start=3, stop=9,
+                    device_put=False) as pf:
+        got = list(pf)
+    assert got == [(s, s * 10) for s in range(3, 9)]
+
+
+def test_prefetch_overlaps_producer_with_consumer():
+    """The producer must be at most ``depth`` ahead, never behind: while the
+    consumer holds batch i, batch i+1 is (being) computed — not batch i+5."""
+    produced = []
+
+    def batch_fn(s):
+        produced.append(s)
+        return s
+
+    with Prefetcher(batch_fn, start=0, stop=32, depth=1,
+                    device_put=False) as pf:
+        step0 = next(pf)
+        time.sleep(0.05)  # consumer "computes"; producer may stage 1 + 1
+        ahead = len(produced)
+        assert step0 == (0, 0)
+        # one in the queue + one in flight at most
+        assert ahead <= 3, produced
+        rest = list(pf)
+    assert [s for s, _ in [step0] + rest] == list(range(32))
+
+
+def test_prefetch_exhaustion_is_sticky():
+    """next() after exhaustion must keep raising StopIteration, never block
+    on the drained queue."""
+    pf = Prefetcher(lambda s: s, start=0, stop=3, device_put=False)
+    assert list(pf) == [(0, 0), (1, 1), (2, 2)]
+    for _ in range(3):
+        try:
+            next(pf)
+            raise AssertionError("expected StopIteration")
+        except StopIteration:
+            pass
+    pf.close()
+
+
+def test_prefetch_error_propagates_and_closes():
+    def bad(s):
+        if s == 2:
+            raise RuntimeError("boom at 2")
+        return s
+
+    pf = Prefetcher(bad, start=0, stop=10, device_put=False)
+    out = []
+    try:
+        for s, b in pf:
+            out.append(s)
+        raise AssertionError("expected RuntimeError")
+    except RuntimeError as e:
+        assert "boom at 2" in str(e)
+    assert out == [0, 1]
+    pf.close()  # idempotent
+
+
+def test_prefetch_generator_form_closes_producer():
+    gen = prefetch_batches(lambda s: s, start=0, stop=100, device_put=False)
+    assert next(gen) == (0, 0)
+    gen.close()  # must not hang on the full queue
+    assert threading.active_count() < 50  # no thread leak across tests
+
+
+# ------------------------------------------------------------- train loop
+def _toy_problem():
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        params = params + batch
+        return params, opt_state, {"loss": params}
+
+    def batch_fn(step):
+        return jnp.float32(step + 1)
+
+    return step_fn, batch_fn
+
+
+def test_train_loop_prefetch_equals_sync():
+    step_fn, batch_fn = _toy_problem()
+    d1, d2 = tempfile.mkdtemp(), tempfile.mkdtemp()
+    try:
+        cfg_sync = LoopConfig(total_steps=17, ckpt_every=100, ckpt_dir=d1,
+                              log_every=1, prefetch=False)
+        cfg_pref = LoopConfig(total_steps=17, ckpt_every=100, ckpt_dir=d2,
+                              log_every=1, prefetch=True)
+        p1, _, h1 = train(cfg_sync, step_fn, jnp.float32(0), None, batch_fn,
+                          resume=False)
+        p2, _, h2 = train(cfg_pref, step_fn, jnp.float32(0), None, batch_fn,
+                          resume=False)
+        assert float(p1) == float(p2)
+        assert h1 == h2
+    finally:
+        shutil.rmtree(d1, ignore_errors=True)
+        shutil.rmtree(d2, ignore_errors=True)
+
+
+def test_train_loop_prefetch_resume_determinism():
+    """Crash + resume with prefetch on: identical final state (batch_fn is
+    a pure function of step, so overlap cannot change the data order)."""
+    from repro.train.loop import FailureInjector
+    step_fn, batch_fn = _toy_problem()
+    d = tempfile.mkdtemp()
+    try:
+        cfg = LoopConfig(total_steps=12, ckpt_every=4, ckpt_dir=d,
+                         log_every=100, prefetch=True)
+        try:
+            train(cfg, step_fn, jnp.float32(0), None, batch_fn,
+                  failure=FailureInjector(fail_at_step=9), resume=False)
+            raise AssertionError("expected injected failure")
+        except RuntimeError:
+            pass
+        p, _, _ = train(cfg, step_fn, jnp.float32(0), None, batch_fn,
+                        resume=True)
+        assert float(p) == sum(range(1, 13))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+# ---------------------------------------------------------------- sampler
+def test_sampler_iter_batches_prefetch_matches_sync():
+    rng = np.random.default_rng(0)
+    dst, src = random_coo(rng, 128, 512)
+    ds = SampledDataset(
+        coo=COO.from_arrays(dst, src, 128),
+        features=jnp.ones((128, 8), jnp.float32),
+        labels=jnp.zeros((128,), jnp.int32),
+        fanouts=(3, 2), batch_size=16, seed=0)
+    sync = [ds.batch(s) for s in range(4)]
+    with ds.iter_batches(start=0, stop=4, prefetch=True) as it:
+        pref = list(it)
+    assert [s for s, _ in pref] == [0, 1, 2, 3]
+    for (s, got), want in zip(pref, sync):
+        np.testing.assert_array_equal(np.asarray(got.edge_dst),
+                                      np.asarray(want.edge_dst))
+        np.testing.assert_array_equal(np.asarray(got.node_feat),
+                                      np.asarray(want.node_feat))
