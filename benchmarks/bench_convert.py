@@ -1,0 +1,73 @@
+"""Convert/sort microbench — packed-key vs two-pass vs XLA baseline.
+
+Seeds the BENCH trajectory: emits ``BENCH_convert.json`` (repo root) with
+median wall-clock per call for the three graph-conversion paths at a
+subgraph-conversion scale (the shape ``sample_subgraph`` re-converts every
+step — the packed-key fast path) and at a larger graph scale, plus the
+packed-over-two-pass speedup the Ordering rewrite buys. CPU-host proxy
+numbers: absolute times are not TPU times, but the pass-count contrast
+(one global sort vs two) is schedule-level and survives the port.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from functools import partial
+
+import jax
+
+from repro.core import EngineConfig, convert, convert_xla
+
+from .common import emit, make_graph, time_fn
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_convert.json")
+
+# (label, n_edges, w_upe): subgraph-conversion scale (what sample_subgraph
+# re-converts per training step) and a graph-conversion scale. w_upe=1024
+# puts the merge tree (where packed halves the rounds) at realistic depth.
+CASES = [
+    ("subgraph_16k", 16384, 1024),
+    ("graph_131k", 131072, 1024),
+]
+
+
+def _jit_convert(cfg: EngineConfig):
+    return jax.jit(partial(convert, cfg=cfg))
+
+
+def run() -> dict:
+    results: dict = {"cases": {}}
+    for label, n_edges, w_upe in CASES:
+        coo = make_graph(n_edges)
+        base = EngineConfig(w_upe=w_upe, n_upe=8)
+        rows = {}
+        for mode in ("packed", "two_pass"):
+            cfg = dataclasses.replace(base, sort_mode=mode)
+            rows[mode] = time_fn(_jit_convert(cfg), coo, iters=7, warmup=2)
+            emit(f"convert/{label}/{mode}", rows[mode], f"e={n_edges}")
+        rows["xla"] = time_fn(jax.jit(convert_xla), coo, iters=7, warmup=2)
+        emit(f"convert/{label}/xla", rows["xla"], f"e={n_edges}")
+        speedup = rows["two_pass"] / rows["packed"]
+        emit(f"convert/{label}/speedup_packed_vs_two_pass", speedup,
+             f"e={n_edges}")
+        results["cases"][label] = {
+            "n_edges": n_edges,
+            "n_nodes": int(coo.n_nodes),
+            "w_upe": w_upe,
+            "packed_us": rows["packed"],
+            "two_pass_us": rows["two_pass"],
+            "xla_us": rows["xla"],
+            "speedup_packed_vs_two_pass": speedup,
+        }
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    return results
+
+
+if __name__ == "__main__":
+    jax.config.update("jax_platform_name", "cpu")
+    print("name,us_per_call,derived")
+    run()

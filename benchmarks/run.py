@@ -12,11 +12,12 @@ def main() -> None:
     import jax
     jax.config.update("jax_platform_name", "cpu")
 
-    from . import (fig5_preproc_fraction, fig6_breakdown,
+    from . import (bench_convert, fig5_preproc_fraction, fig6_breakdown,
                    fig10_serialization, fig18_end2end, fig22_reconfig,
                    fig24_costmodel, fig25_sensitivity, fig_engine_overlap,
                    roofline)
     suites = {
+        "convert": bench_convert.run,  # emits BENCH_convert.json
         "fig5": fig5_preproc_fraction.run,
         "fig6": fig6_breakdown.run,
         "fig10": fig10_serialization.run,

@@ -13,12 +13,13 @@ The paper's contribution as composable JAX modules:
 * reconfig      — AutoPre / StatPre / DynPre execution modes
 """
 from .graph import COO, CSC, SENTINEL, Subgraph, next_pow2, pad_to, random_coo
-from .set_partition import (displacement, partition_indices, radix_partition,
+from .set_partition import (displacement, gather_sources_from_counts,
+                            partition_indices, radix_partition,
                             radix_sort_by_key, set_partition)
 from .set_count import (count_equal, count_less_than, filter_lookup,
                         searchsorted_oracle)
-from .ordering import edge_ordering, edge_ordering_xla, merge_sorted, \
-    stable_sort_by_key
+from .ordering import (edge_ordering, edge_ordering_xla, merge_sorted,
+                       stable_sort_by_key, supports_packed_keys)
 from .reshaping import (build_pointer_array, build_pointer_array_serial,
                         data_reshaping, graph_convert)
 from .sampling import sample_khop, select_floyd, select_keysort, \

@@ -2,24 +2,37 @@
 
 Sort the COO edge array by (dst, src). The paper concatenates each pair into a
 64-bit key and LSD-radix-sorts it chunk-by-chunk on UPEs, then merges sorted
-chunks. JAX disables int64 by default, so we use the equivalent LSD
-formulation: a stable global sort by src followed by a stable global sort by
-dst — identical output, pure 32-bit keys.
+chunks. JAX disables int64 by default, so two equivalent 32-bit formulations
+are provided, selected by ``mode``:
+
+* ``"packed"`` — the paper's concatenated key, shrunk to fit int32: when
+  ``2 · bits(n_nodes) ≤ 31`` (all graphs ≤ 32767 nodes — always true for the
+  subgraph re-conversion inside ``sample_subgraph``), pack
+  ``(dst << src_bits) | src`` into ONE key with the edge id as payload and
+  run a single global sort, then unpack ``(dst, src)``. Half the sort passes
+  and half the merge rounds of the LSD scheme.
+* ``"two_pass"`` — the LSD fallback for wide VID spaces: a stable global
+  sort by src followed by a stable global sort by dst.
+* ``"auto"`` (default) — ``"packed"`` whenever the VID space allows it.
+
+Both modes produce bit-identical output (stable sort by the lexicographic
+(dst, src) key; ties keep original order either way).
 
 Each global sort = (a) chunk-local LSD radix sort (the UPE chunk, Pallas
 kernel available in kernels/radix_sort.py) + (b) log2(C) parallel merge
 rounds. The merge rank trick — position of an element is its own index plus
 its searchsorted rank in the sibling run — is the contention-free analog of
 the paper's w/2-per-cycle UPE merge network, and is itself a set-counting
-operation (count of sibling elements less-than).
+operation (count of sibling elements less-than). Relocation is a gather by
+the inverse merge permutation (no scatter in the lowered program); the
+fused VMEM merge kernel (kernels/merge.py) can collapse the first rounds
+into one pass over HBM via ``merge_fn``.
 
 Sentinel handling: padded entries carry SENTINEL; keys are clipped to
 ``n_nodes`` (one past any valid VID) before sorting so the radix width stays
 ceil(log2(n_nodes+1)) bits, and restored afterwards.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -33,26 +46,40 @@ def _bits_for(n: int) -> int:
     return max(1, int(n).bit_length())
 
 
-def merge_sorted(a_keys, a_vals, b_keys, b_vals):
-    """Stable parallel merge of two sorted (key, val) runs of equal length.
+def supports_packed_keys(n_nodes: int) -> bool:
+    """True when (dst, src) pairs fit one non-negative int32 packed key."""
+    return 2 * _bits_for(n_nodes) <= 31
 
-    A-elements win ties (stability). Fully parallel: each element's output
-    position = own index + rank within the sibling run.
+
+def merge_sorted(a_keys, a_vals, b_keys, b_vals):
+    """Stable parallel merge of two sorted (key, val) runs.
+
+    A-elements win ties (stability). Fully parallel and scatter-free:
+    ``pos_a`` (own index + rank within the sibling run) is strictly
+    increasing, so for output slot j the count ``r_a`` of a-elements placed
+    at slots ≤ j is one more binary search; slot j holds ``a[r_a - 1]`` when
+    that element sits exactly at j, else ``b[j - r_a]``. Relocation is two
+    gathers — the inverse-permutation router — instead of four scatters.
     """
     la = a_keys.shape[0]
     lb = b_keys.shape[0]
+    n = la + lb
     # rank_in_sorted: jnp.searchsorted's 'scan' method is sequential over
     # queries (a 65536-trip while loop at Reddit scale) and its 'sort'
     # method replicates an XLA sort per device under GSPMD; the explicit
     # log-depth binary search stays parallel AND sharded (§Perf convert).
     pos_a = jnp.arange(la, dtype=jnp.int32) + rank_in_sorted(
         b_keys, a_keys, side="left")
-    pos_b = jnp.arange(lb, dtype=jnp.int32) + rank_in_sorted(
-        a_keys, b_keys, side="right")
-    out_k = jnp.zeros((la + lb,), a_keys.dtype)
-    out_v = jnp.zeros((la + lb,) + a_vals.shape[1:], a_vals.dtype)
-    out_k = out_k.at[pos_a].set(a_keys).at[pos_b].set(b_keys)
-    out_v = out_v.at[pos_a].set(a_vals).at[pos_b].set(b_vals)
+    j = jnp.arange(n, dtype=jnp.int32)
+    r_a = rank_in_sorted(pos_a, j, side="right")
+    ia = jnp.clip(r_a - 1, 0, la - 1)
+    from_a = (r_a > 0) & (jnp.take(pos_a, ia, mode="clip") == j)
+    ib = jnp.clip(j - r_a, 0, lb - 1)
+    out_k = jnp.where(from_a, jnp.take(a_keys, ia, mode="clip"),
+                      jnp.take(b_keys, ib, mode="clip"))
+    sel = from_a.reshape((n,) + (1,) * (a_vals.ndim - 1))
+    out_v = jnp.where(sel, jnp.take(a_vals, ia, axis=0, mode="clip"),
+                      jnp.take(b_vals, ib, axis=0, mode="clip"))
     return out_k, out_v
 
 
@@ -82,15 +109,21 @@ def _chunk_sort(keys, vals, chunk: int, key_bits: int, radix_bits: int,
     return ks.reshape(n), vs.reshape(n)
 
 
-def merge_rounds(ks: jnp.ndarray, vs: jnp.ndarray, run: int
-                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+def merge_rounds(ks: jnp.ndarray, vs: jnp.ndarray, run: int,
+                 merge_fn=None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Binary merge tree: sorted runs of length ``run`` → one sorted array.
 
-    Shared by the single-device sorter below and the mesh-sharded sorter
-    (engine/shard.py), which continues this exact tree from its per-device
-    runs — one implementation keeps the bit-identical guarantee honest.
+    ``merge_fn(ks, vs, run) -> (ks, vs, new_run)`` optionally fuses the
+    first rounds into one kernel pass over VMEM-resident run pairs
+    (kernels/merge.py), collapsing per-round HBM round-trips; remaining
+    (large-run) rounds run at the jnp level. Shared by the single-device
+    sorter below and the mesh-sharded sorter (engine/shard.py), which
+    continues this exact tree from its per-device runs — one implementation
+    keeps the bit-identical guarantee honest.
     """
     n = ks.shape[0]
+    if merge_fn is not None and run < n:
+        ks, vs, run = merge_fn(ks, vs, run)
     while run < n:
         kr = ks.reshape(-1, 2, run)
         vr = vs.reshape(-1, 2, run)
@@ -103,14 +136,15 @@ def merge_rounds(ks: jnp.ndarray, vs: jnp.ndarray, run: int
 
 
 def stable_sort_by_key(keys: jnp.ndarray, vals: jnp.ndarray, key_bound: int,
-                       chunk: int = 4096, radix_bits: int = 2,
-                       map_batch: int = 4,
-                       chunk_sort_fn=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+                       chunk: int = 4096, radix_bits: int = 4,
+                       map_batch: int = 4, chunk_sort_fn=None,
+                       merge_fn=None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Global stable sort: chunked UPE radix sort + parallel merge rounds.
 
     ``key_bound``: exclusive upper bound of valid keys (sentinels are clipped
     to key_bound and restored). ``chunk_sort_fn`` lets the Pallas UPE kernel
-    replace the jnp chunk sorter.
+    replace the jnp chunk sorter; ``merge_fn`` lets the fused Pallas merge
+    kernel absorb the first merge rounds (see ``merge_rounds``).
     """
     n = keys.shape[0]
     chunk = min(chunk, n)
@@ -124,27 +158,57 @@ def stable_sort_by_key(keys: jnp.ndarray, vals: jnp.ndarray, key_bound: int,
     else:
         ks, vs = chunk_sort_fn(clipped, vals, chunk, key_bits)
 
-    ks, vs = merge_rounds(ks, vs, chunk)
+    ks, vs = merge_rounds(ks, vs, chunk, merge_fn=merge_fn)
     ks = jnp.where(ks >= key_bound, SENTINEL, ks)
     return ks, vs
 
 
-def edge_ordering(coo: COO, chunk: int = 4096, radix_bits: int = 2,
+def edge_ordering(coo: COO, chunk: int = 4096, radix_bits: int = 4,
                   map_batch: int = 4, chunk_sort_fn=None,
-                  sort_fn=None) -> COO:
-    """Sort edges by (dst, src): LSD = stable sort by src, then by dst.
+                  sort_fn=None, merge_fn=None, mode: str = "auto") -> COO:
+    """Sort edges by (dst, src) — packed single-pass or two-pass LSD.
 
     ``sort_fn(keys, vals, key_bound) -> (keys, vals)`` overrides the global
     stable sorter — the mesh-sharded engine passes its shard_map sorter so
-    both paths share ONE copy of the two-pass/sentinel-restore logic.
+    both paths share ONE copy of the packing/two-pass/sentinel-restore
+    logic. ``mode``: "auto" (packed when the VID space fits), "packed", or
+    "two_pass"; requesting "packed" on a too-wide VID space raises.
     """
     if sort_fn is None:
         def sort_fn(k, v, bound):
             return stable_sort_by_key(k, v, bound, chunk=chunk,
                                       radix_bits=radix_bits,
                                       map_batch=map_batch,
-                                      chunk_sort_fn=chunk_sort_fn)
+                                      chunk_sort_fn=chunk_sort_fn,
+                                      merge_fn=merge_fn)
     bound = coo.n_nodes
+    if mode == "auto":
+        mode = "packed" if supports_packed_keys(bound) else "two_pass"
+    if mode == "packed":
+        if not supports_packed_keys(bound):
+            raise ValueError(
+                f"packed-key ordering needs 2*bits(n_nodes) <= 31; "
+                f"n_nodes={bound} does not fit — use mode='two_pass'")
+        bits = _bits_for(bound)
+        # clip BOTH columns to bound so sentinels stay in-radix; the packed
+        # key orders by (dst, src) lexicographically in one stable sort
+        d = jnp.minimum(coo.dst, jnp.int32(bound))
+        s = jnp.minimum(coo.src, jnp.int32(bound))
+        packed = (d << bits) | s
+        edge_id = jnp.arange(coo.capacity, dtype=jnp.int32)
+        pk, _ = sort_fn(packed, edge_id, (bound << bits) | bound)
+        # unpack; all-sentinel rows were restored to SENTINEL by the sorter
+        mask = (1 << bits) - 1
+        sent = pk == SENTINEL
+        dst2 = jnp.where(sent, SENTINEL, pk >> bits)
+        src2 = jnp.where(sent, SENTINEL, pk & mask)
+        dst2 = jnp.where(dst2 >= bound, SENTINEL, dst2)
+        src2 = jnp.where((src2 >= bound) | (dst2 == SENTINEL), SENTINEL,
+                         src2)
+        return COO(dst=dst2, src=src2, n_edges=coo.n_edges,
+                   n_nodes=coo.n_nodes)
+    if mode != "two_pass":
+        raise ValueError(f"unknown ordering mode {mode!r}")
     # pass 1: by src (secondary key), dst rides along as payload
     src1, dst1 = sort_fn(coo.src, coo.dst, bound)
     # pass 2: by dst (primary key), src rides along; stability keeps src order

@@ -23,22 +23,42 @@ from .reindexing import build_reindex_map, reindex_edges
 from .costmodel import EngineConfig
 
 
+def kernel_fns(cfg: EngineConfig):
+    """(chunk_sort_fn, count_fn, merge_fn) for ``cfg`` — THE Pallas routing
+    rule. ``use_pallas`` swaps in the UPE chunk-sort kernel (digit width =
+    ``cfg.radix_bits``), the SCR count kernel, and the fused VMEM merge
+    kernel; one definition shared by ``convert``, ``sample_subgraph`` and
+    the mesh-sharded engine so no path can silently drop a knob.
+    """
+    if not cfg.use_pallas:
+        return None, None, None
+    from repro.kernels import ops as _kops
+    return (_kops.make_pallas_chunk_sort_fn(cfg.radix_bits),
+            _kops.pallas_count_fn, _kops.pallas_merge_fn)
+
+
 def convert(coo: COO, cfg: EngineConfig | None = None,
             count_fn=None, chunk_sort_fn=None) -> CSC:
     """Graph conversion: Ordering + Reshaping under an engine config.
 
-    ``cfg.use_pallas`` routes the chunk sort through the UPE Pallas kernel
-    and the pointer build through the SCR Pallas kernel (interpret mode on
-    CPU; Mosaic on TPU). Explicit ``count_fn``/``chunk_sort_fn`` override.
+    ``cfg.sort_mode`` selects packed single-pass vs two-pass LSD Ordering
+    (bit-identical outputs; "auto" packs whenever the VID space fits one
+    int32 key) and ``cfg.radix_bits`` is the digit width of every radix
+    pass on both the jnp and Pallas paths. ``cfg.use_pallas`` routes the
+    chunk sort through the UPE Pallas kernel, the merge tree through the
+    fused VMEM merge kernel, and the pointer build through the SCR Pallas
+    kernel (interpret mode on CPU; Mosaic on TPU). Explicit
+    ``count_fn``/``chunk_sort_fn`` override.
     """
     cfg = cfg or EngineConfig()
-    if cfg.use_pallas:
-        from repro.kernels import ops as _kops
-        chunk_sort_fn = chunk_sort_fn or _kops.pallas_chunk_sort_fn
-        count_fn = count_fn or _kops.pallas_count_fn
+    k_sort, k_count, merge_fn = kernel_fns(cfg)
+    chunk_sort_fn = chunk_sort_fn or k_sort
+    count_fn = count_fn or k_count
     sorted_coo = edge_ordering(coo, chunk=min(cfg.w_upe, coo.capacity),
+                               radix_bits=cfg.radix_bits,
                                map_batch=cfg.n_upe,
-                               chunk_sort_fn=chunk_sort_fn)
+                               chunk_sort_fn=chunk_sort_fn,
+                               merge_fn=merge_fn, mode=cfg.sort_mode)
     return data_reshaping(sorted_coo, count_fn=count_fn)
 
 
@@ -56,8 +76,16 @@ def sample_subgraph(csc: CSC, batch_nodes: jnp.ndarray,
                     fanouts: tuple[int, ...], key: jax.Array,
                     cfg: EngineConfig | None = None,
                     count_fn=None, chunk_sort_fn=None) -> Subgraph:
-    """Selecting + Reindexing + subgraph conversion → sampled CSC subgraph."""
+    """Selecting + Reindexing + subgraph conversion → sampled CSC subgraph.
+
+    The subgraph re-conversion always qualifies for the packed-key
+    single-pass Ordering under ``sort_mode="auto"``: the reindexed VID
+    space is batch-sized, so (dst, src) packs into one int32 key.
+    """
     cfg = cfg or EngineConfig()
+    k_sort, k_count, merge_fn = kernel_fns(cfg)
+    chunk_sort_fn = chunk_sort_fn or k_sort
+    count_fn = count_fn or k_count
     nodes, e_dst, e_src = sample_khop(
         csc, batch_nodes, fanouts, key, selection=cfg.selection)
     n_cap = nodes.shape[0]
@@ -72,7 +100,9 @@ def sample_subgraph(csc: CSC, batch_nodes: jnp.ndarray,
                     constant_values=int(SENTINEL)),
         n_edges=sub_coo_raw.n_edges, n_nodes=n_cap)
     sub_sorted = edge_ordering(sub_coo, chunk=min(cfg.w_upe, e_cap),
-                               chunk_sort_fn=chunk_sort_fn)
+                               radix_bits=cfg.radix_bits,
+                               chunk_sort_fn=chunk_sort_fn,
+                               merge_fn=merge_fn, mode=cfg.sort_mode)
     sub_csc = data_reshaping(sub_sorted, count_fn=count_fn)
     return Subgraph(csc=sub_csc, order=rmap.order, n_sub_nodes=rmap.n_unique)
 

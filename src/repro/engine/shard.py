@@ -34,6 +34,7 @@ from repro.core.costmodel import EngineConfig
 from repro.core.graph import COO, CSC, SENTINEL, Subgraph
 from repro.core.ordering import (_bits_for, _chunk_sort, edge_ordering,
                                  merge_rounds, stable_sort_by_key)
+from repro.core.pipeline import kernel_fns
 from repro.core.pipeline import preprocess as _preprocess_single
 from repro.core.pipeline import sample_subgraph
 from repro.core.set_count import rank_in_sorted
@@ -50,18 +51,22 @@ def _dp(mesh: Mesh | None) -> tuple[tuple[str, ...], int]:
 
 def shard_sort_by_key(mesh: Mesh, keys: jnp.ndarray, vals: jnp.ndarray,
                       key_bound: int, chunk: int = 4096,
-                      radix_bits: int = 2, map_batch: int = 0,
-                      chunk_sort_fn=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+                      radix_bits: int = 4, map_batch: int = 0,
+                      chunk_sort_fn=None, merge_fn=None
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Global stable sort with the chunk-sort stage sharded over devices.
 
     Each dp shard owns ``n / n_dev`` contiguous elements, chunk-radix-sorts
     them (all lanes vmapped — on the sharded path the devices ARE the
     lanes) and merges locally to one run; the remaining ``log2(n_dev)``
     merge rounds run on the global arrays (GSPMD collectives).
-    ``chunk_sort_fn`` swaps in the Pallas UPE kernel, same contract as
-    ``core.ordering.stable_sort_by_key``. Falls back to the single-device
-    sorter — honoring ``map_batch`` (the UPE lane bound) there — when the
-    mesh has no dp extent or the buffer does not divide.
+    ``chunk_sort_fn`` swaps in the Pallas UPE kernel and ``merge_fn`` the
+    fused VMEM merge kernel for the *device-local* merge rounds, same
+    contracts as ``core.ordering.stable_sort_by_key`` (the cross-device
+    rounds stay at the jnp level — they are collective by construction).
+    Falls back to the single-device sorter — honoring ``map_batch`` (the
+    UPE lane bound) there — when the mesh has no dp extent or the buffer
+    does not divide.
     """
     n = keys.shape[0]
     dp, nd = _dp(mesh)
@@ -70,7 +75,8 @@ def shard_sort_by_key(mesh: Mesh, keys: jnp.ndarray, vals: jnp.ndarray,
         return stable_sort_by_key(keys, vals, key_bound, chunk=min(chunk, n),
                                   radix_bits=radix_bits,
                                   map_batch=map_batch,
-                                  chunk_sort_fn=chunk_sort_fn)
+                                  chunk_sort_fn=chunk_sort_fn,
+                                  merge_fn=merge_fn)
     local = n // nd
     chunk = min(chunk, local)
     key_bits = _bits_for(key_bound)
@@ -82,7 +88,7 @@ def shard_sort_by_key(mesh: Mesh, keys: jnp.ndarray, vals: jnp.ndarray,
                                  map_batch=0)
         else:
             ks, vs = chunk_sort_fn(k_l, v_l, chunk, key_bits)
-        return merge_rounds(ks, vs, chunk)
+        return merge_rounds(ks, vs, chunk, merge_fn=merge_fn)
 
     fn = shard_map(local_run, mesh=mesh, in_specs=(P(dp), P(dp)),
                    out_specs=(P(dp), P(dp)), check_vma=False)
@@ -92,29 +98,28 @@ def shard_sort_by_key(mesh: Mesh, keys: jnp.ndarray, vals: jnp.ndarray,
     return ks, vs
 
 
-def _kernel_fns(cfg: EngineConfig):
-    """(chunk_sort_fn, count_fn) for ``cfg`` — the same Pallas UPE/SCR
-    routing rule as ``core.pipeline.convert``, so the sharded engine honors
-    ``use_pallas`` instead of silently dropping it."""
-    if not cfg.use_pallas:
-        return None, None
-    from repro.kernels import ops as _kops
-    return _kops.pallas_chunk_sort_fn, _kops.pallas_count_fn
+# THE Pallas routing rule, shared with core.pipeline.convert/sample_subgraph
+# so the sharded engine honors use_pallas (and its radix_bits) instead of
+# silently dropping them.
+_kernel_fns = kernel_fns
 
 
 def shard_edge_ordering(mesh: Mesh, coo: COO,
                         cfg: EngineConfig | None = None) -> COO:
-    """Sharded edge Ordering: ``core.ordering.edge_ordering``'s two-pass
-    LSD scheme with the global sorter swapped for the shard_map one."""
+    """Sharded edge Ordering: ``core.ordering.edge_ordering``'s key scheme
+    (packed single-pass or two-pass LSD, per ``cfg.sort_mode``) with the
+    global sorter swapped for the shard_map one."""
     cfg = cfg or EngineConfig()
-    chunk_sort_fn, _ = _kernel_fns(cfg)
+    chunk_sort_fn, _, merge_fn = _kernel_fns(cfg)
 
     def sort_fn(k, v, bound):
         return shard_sort_by_key(mesh, k, v, bound, chunk=cfg.w_upe,
+                                 radix_bits=cfg.radix_bits,
                                  map_batch=cfg.n_upe,
-                                 chunk_sort_fn=chunk_sort_fn)
+                                 chunk_sort_fn=chunk_sort_fn,
+                                 merge_fn=merge_fn)
 
-    return edge_ordering(coo, sort_fn=sort_fn)
+    return edge_ordering(coo, sort_fn=sort_fn, mode=cfg.sort_mode)
 
 
 def shard_pointer_array(mesh: Mesh, sorted_dst: jnp.ndarray,
@@ -146,7 +151,7 @@ def shard_convert(mesh: Mesh, coo: COO,
                   cfg: EngineConfig | None = None) -> CSC:
     """Sharded graph conversion: Ordering + Reshaping over the dp axes."""
     cfg = cfg or EngineConfig()
-    _, count_fn = _kernel_fns(cfg)
+    _, count_fn, _ = _kernel_fns(cfg)
     sorted_coo = shard_edge_ordering(mesh, coo, cfg)
     ptr = shard_pointer_array(mesh, sorted_coo.dst, coo.n_nodes,
                               count_fn=count_fn)

@@ -4,9 +4,12 @@ TPU-adaptation notes (DESIGN.md §2):
 
 * The UPE's prefix-sum adder network is realized as a Hillis–Steele
   log-depth shift-add scan — literally the paper's Fig. 12b hierarchy.
-* The UPE's relocation router is realized as a one-hot matmul on the MXU.
-  Exact integer relocation through the fp32 MXU uses a 16-bit split
-  (one-hot rows sum to 1, so each half ≤ 65535 is exactly representable).
+* The UPE's relocation router is a gather by the inverse permutation
+  (``core.set_partition.gather_sources_from_counts``): a log-depth binary
+  search over the monotone inclusive bucket-count columns finds the source
+  of every output slot, and the move is one ``jnp.take`` — O(N·log N)
+  versus the O(N²) one-hot MXU matmul it replaced.
+  ``onehot_relocate_i32`` is kept as the MXU reference/benchmark router.
 * interpret=True executes kernels in Python on CPU — the validation target
   in this container; on real TPUs the same pallas_call lowers to Mosaic.
 """

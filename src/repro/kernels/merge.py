@@ -1,0 +1,99 @@
+"""Fused VMEM merge kernel — the UPE "merging" stage without HBM laps.
+
+``core.ordering.merge_rounds`` runs log2(n/chunk) rank-merge rounds; at the
+jnp level every round is a full-array HBM round-trip (read both runs, write
+the merged run). This kernel loads one super-block of ``run · 2^rounds``
+elements per grid step and performs all ``rounds`` merge rounds while the
+runs stay VMEM-resident, writing each super-block back exactly once — the
+TPU analog of the paper's w/2-per-cycle UPE merge network chewing through
+a resident chunk. Remaining rounds (runs larger than the VMEM budget)
+continue at the jnp level, and the mesh-sharded engine (engine/shard.py)
+continues the same binary tree cross-device, so the merge tree — and the
+bit-identical stable-sort guarantee — is unchanged; only the memory traffic
+schedule differs.
+
+The per-pair merge is the scatter-free rank-merge from
+``core.ordering.merge_sorted`` (log-depth binary searches + gathers), so
+the whole kernel lowers without scatters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.ordering import merge_sorted
+
+from .common import INTERPRET
+
+# Elements of one (keys, vals) super-block held in VMEM per grid step.
+# 2 arrays × in+out × 4 B × 65536 = 2 MiB — comfortably inside the ~16 MiB
+# VMEM budget alongside the binary-search scratch.
+DEFAULT_MAX_BLOCK = 65536
+
+
+def _make_kernel(run: int, rounds: int):
+    def kernel(key_ref, val_ref, out_key_ref, out_val_ref):
+        ks = key_ref[...]
+        vs = val_ref[...]
+        r = run
+        for _ in range(rounds):  # static rounds, runs stay resident
+            kr = ks.reshape(-1, 2, r)
+            vr = vs.reshape(-1, 2, r)
+            ks, vs = jax.vmap(merge_sorted)(kr[:, 0], vr[:, 0], kr[:, 1],
+                                            vr[:, 1])
+            r *= 2
+            ks = ks.reshape(-1)
+            vs = vs.reshape(-1)
+        out_key_ref[...] = ks
+        out_val_ref[...] = vs
+
+    return kernel
+
+
+def fused_merge_rounds(keys: jnp.ndarray, vals: jnp.ndarray, run: int,
+                       max_block: int = DEFAULT_MAX_BLOCK
+                       ) -> tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Merge sorted runs of length ``run`` up to length ``max_block`` with
+    all intermediate rounds fused in VMEM.
+
+    Returns ``(keys, vals, new_run)`` — the ``merge_fn`` contract of
+    ``core.ordering.merge_rounds``; ``new_run`` stays a Python int (this
+    function is deliberately not jitted — callers trace it inside the
+    pipeline jit, and the merge tree's remaining-round count is static).
+    No-op (rounds that don't fit a block run at the jnp level) when even
+    one doubling exceeds ``max_block`` or the array does not tile into
+    super-blocks.
+    """
+    n = keys.shape[0]
+    block = run
+    rounds = 0
+    while block * 2 <= max_block and n % (block * 2) == 0 and block < n:
+        block *= 2
+        rounds += 1
+    if rounds == 0:
+        return keys, vals, run
+    grid = n // block
+    out_k, out_v = pl.pallas_call(
+        _make_kernel(run, rounds),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), keys.dtype),
+            jax.ShapeDtypeStruct((n,), vals.dtype),
+        ],
+        interpret=INTERPRET,
+    )(keys, vals)
+    return out_k, out_v, block
+
+
+def pallas_merge_fn(keys, vals, run):
+    """Adapter matching core.ordering.merge_rounds(merge_fn=...)."""
+    return fused_merge_rounds(keys, vals, run)

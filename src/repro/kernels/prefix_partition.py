@@ -2,8 +2,10 @@
 
 One kernel invocation partitions a VMEM-resident block: the condition array
 feeds the log-depth adder network (displacement array), the relocation
-router is a one-hot MXU matmul. Grid iterates independent blocks (the
-multi-UPE configuration); each grid step is one UPE.
+router is a gather by the inverse permutation — a log-depth binary search
+over the two monotone count columns plus one ``jnp.take`` (O(N·log N),
+replacing the O(N²) one-hot MXU matmul). Grid iterates independent blocks
+(the multi-UPE configuration); each grid step is one UPE.
 """
 from __future__ import annotations
 
@@ -13,19 +15,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import INTERPRET, onehot_relocate_i32, prefix_sum_tree
+from repro.core.set_partition import gather_sources_from_counts
+
+from .common import INTERPRET, prefix_sum_tree
 
 
 def _partition_kernel(cond_ref, val_ref, out_ref, nsel_ref):
     cond = cond_ref[...].astype(jnp.int32)
     vals = val_ref[...]
-    incl = prefix_sum_tree(cond)  # inclusive scan — the adder network
-    n_sel = incl[-1]
-    left = incl - cond  # exclusive: rank among selected
-    inv = 1 - cond
-    right = prefix_sum_tree(inv) - inv  # rank among unselected
-    dest = jnp.where(cond == 1, left, n_sel + right)
-    out_ref[...] = onehot_relocate_i32(dest, vals)  # MXU router
+    incl_sel = prefix_sum_tree(cond)  # inclusive scan — the adder network
+    n_sel = incl_sel[-1]
+    incl = jnp.stack([incl_sel, prefix_sum_tree(1 - cond)], axis=1)  # [N, 2]
+    base = jnp.stack([jnp.int32(0), n_sel])
+    src = gather_sources_from_counts(incl, base)  # inverse-permutation router
+    out_ref[...] = jnp.take(vals, src, mode="clip")
     nsel_ref[...] = n_sel[None]
 
 

@@ -1,11 +1,13 @@
 """UPE chunk radix sort kernel (paper §V-A, Fig. 15 "splitting" stage).
 
 Each grid step radix-sorts one VMEM-resident chunk of (key, value) pairs —
-one UPE. Every digit pass is a set-partition: per-bucket exclusive prefix
-sums (the adder network, B cooperating columns) give the within-bucket rank,
-bucket bases come from an unrolled scan over the B column sums, and the
-relocation router is the one-hot MXU matmul. Chunks are merged outside the
-kernel by the parallel rank-merge (core/ordering.py) — the "merging" stage.
+one UPE. Every digit pass is a set-partition: per-bucket inclusive prefix
+sums (the adder network, B cooperating columns) feed the gather-based
+relocation router — a log-depth binary search finds the source of every
+output slot and the move is a gather (``jnp.take``), O(N·log N) per pass
+versus the O(N²) one-hot MXU matmuls this kernel used to issue. Chunks are
+merged outside the kernel by the parallel rank-merge (core/ordering.py,
+kernels/merge.py) — the "merging" stage.
 """
 from __future__ import annotations
 
@@ -15,7 +17,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import INTERPRET, onehot_relocate_i32, prefix_sum_tree
+from repro.core.set_partition import digit_relocation_sources
+
+from .common import INTERPRET, prefix_sum_tree
 
 
 def _make_kernel(n_passes: int, radix_bits: int):
@@ -27,14 +31,12 @@ def _make_kernel(n_passes: int, radix_bits: int):
         for p in range(n_passes):  # static LSD passes
             shift = p * radix_bits
             digit = (keys >> shift) & (n_buckets - 1)
-            onehot = (digit[:, None] == jnp.arange(n_buckets, dtype=jnp.int32)
-                      [None, :]).astype(jnp.int32)  # [N, B]
-            within = prefix_sum_tree(onehot, axis=0) - onehot  # rank in bucket
-            counts = jnp.sum(onehot, axis=0)  # [B]
-            base = prefix_sum_tree(counts) - counts  # exclusive over buckets
-            dest = jnp.sum(onehot * (within + base[None, :]), axis=1)
-            keys = onehot_relocate_i32(dest, keys)
-            vals = onehot_relocate_i32(dest, vals)
+            # the shared router, with the Hillis–Steele adder network as
+            # the in-kernel prefix sum (static shifts+adds only)
+            src, _ = digit_relocation_sources(digit, n_buckets,
+                                              prefix_sum_fn=prefix_sum_tree)
+            keys = jnp.take(keys, src, mode="clip")
+            vals = jnp.take(vals, src, mode="clip")
         out_key_ref[...] = keys
         out_val_ref[...] = vals
 
@@ -73,7 +75,16 @@ def radix_sort_chunks(keys: jnp.ndarray, values: jnp.ndarray, chunk: int,
     return out_k, out_v
 
 
-def pallas_chunk_sort_fn(keys, vals, chunk, key_bits):
-    """Adapter matching core.ordering.stable_sort_by_key(chunk_sort_fn=...)."""
-    ks, vs = radix_sort_chunks(keys, vals, chunk=chunk, key_bits=key_bits)
-    return ks, vs
+def make_pallas_chunk_sort_fn(radix_bits: int = 4):
+    """chunk_sort_fn for ``core.ordering.stable_sort_by_key`` with the digit
+    width routed from ``EngineConfig.radix_bits`` (one knob, both paths)."""
+
+    def chunk_sort_fn(keys, vals, chunk, key_bits):
+        return radix_sort_chunks(keys, vals, chunk=chunk, key_bits=key_bits,
+                                 radix_bits=radix_bits)
+
+    return chunk_sort_fn
+
+
+# Default-width adapter (radix_bits=4), kept for existing call sites.
+pallas_chunk_sort_fn = make_pallas_chunk_sort_fn()

@@ -236,6 +236,26 @@ def _dot_flops_line(line: str, symtab: dict[str, list[int]] | None = None
     return 2.0 * out * k
 
 
+_OPCODE_RE = re.compile(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9\-]*)\(")
+
+
+def op_counts(hlo_text: str) -> dict[str, int]:
+    """Opcode → instruction count across every computation.
+
+    Used by the perf-regression guards: the gather-routed convert program
+    must contain zero ``scatter`` ops (tests/test_perf_paths.py) — a
+    scatter reappearing in the lowered HLO means a ``.at[].set`` crept back
+    into the Ordering/Reshaping spine.
+    """
+    counts: dict[str, int] = defaultdict(int)
+    for lines in _split_computations(hlo_text).values():
+        for line in lines:
+            m = _OPCODE_RE.search(line)
+            if m:
+                counts[m.group(1)] += 1
+    return dict(counts)
+
+
 def loop_aware_stats(hlo_text: str) -> LoopAwareStats:
     comps = _split_computations(hlo_text)
     calls, mult = _call_graph(comps)

@@ -1,0 +1,191 @@
+"""The de-quadratic'd Ordering stack: packed-key single-pass sort,
+gather-routed relocation, fused VMEM merges.
+
+Every path must be *bit-identical*: packed vs two-pass vs the XLA
+comparison-sort baseline, across non-pow2 VID spaces, sentinel-heavy
+padding, the ``radix_bits`` sweep, and the Pallas kernels (chunk sort +
+fused merge) against the jnp formulations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (COO, SENTINEL, EngineConfig, convert, convert_xla,
+                        random_coo, stable_sort_by_key, supports_packed_keys)
+from repro.core.ordering import edge_ordering, merge_rounds
+from repro.core.set_partition import gather_sources_from_counts
+
+jax.config.update("jax_platform_name", "cpu")
+
+SEN = int(SENTINEL)
+
+
+def _coo(n_nodes, e, cap, seed=0):
+    rng = np.random.default_rng(seed)
+    dst, src = random_coo(rng, n_nodes, e)
+    return COO.from_arrays(dst, src, n_nodes, capacity=cap), dst, src
+
+
+# ------------------------------------------------------ packed vs two-pass
+@pytest.mark.parametrize("n_nodes", [1, 7, 50, 997, 5000, 32767])
+def test_packed_two_pass_xla_bit_equal_across_vid_widths(n_nodes):
+    """Non-pow2 VID spaces, including the widest packed-capable one."""
+    e = min(4 * n_nodes, 300)
+    coo, dst, src = _coo(n_nodes, e, cap=512, seed=n_nodes)
+    packed = edge_ordering(coo, chunk=128, mode="packed")
+    two = edge_ordering(coo, chunk=128, mode="two_pass")
+    auto = edge_ordering(coo, chunk=128, mode="auto")
+    for name, out in [("two_pass", two), ("auto", auto)]:
+        np.testing.assert_array_equal(np.asarray(packed.dst),
+                                      np.asarray(out.dst), name)
+        np.testing.assert_array_equal(np.asarray(packed.src),
+                                      np.asarray(out.src), name)
+    order = np.lexsort((src, dst))
+    np.testing.assert_array_equal(np.asarray(packed.dst)[:e], dst[order])
+    np.testing.assert_array_equal(np.asarray(packed.src)[:e], src[order])
+    assert np.all(np.asarray(packed.dst)[e:] == SEN)
+    assert np.all(np.asarray(packed.src)[e:] == SEN)
+
+
+def test_auto_mode_falls_back_for_wide_vid_space():
+    assert supports_packed_keys(32767) and not supports_packed_keys(32768)
+    coo, dst, src = _coo(40000, 200, cap=256, seed=1)
+    auto = edge_ordering(coo, chunk=64, mode="auto")
+    two = edge_ordering(coo, chunk=64, mode="two_pass")
+    np.testing.assert_array_equal(np.asarray(auto.dst), np.asarray(two.dst))
+    np.testing.assert_array_equal(np.asarray(auto.src), np.asarray(two.src))
+    with pytest.raises(ValueError, match="packed"):
+        edge_ordering(coo, chunk=64, mode="packed")
+    with pytest.raises(ValueError, match="mode"):
+        edge_ordering(coo, chunk=64, mode="bogus")
+
+
+def test_sentinel_heavy_padding_stays_at_tail():
+    """Capacity ≫ edges: the padded tail must survive every mode."""
+    coo, dst, src = _coo(30, 20, cap=1024, seed=2)
+    for mode in ("packed", "two_pass"):
+        out = edge_ordering(coo, chunk=256, mode=mode)
+        order = np.lexsort((src, dst))
+        np.testing.assert_array_equal(np.asarray(out.dst)[:20], dst[order])
+        np.testing.assert_array_equal(np.asarray(out.src)[:20], src[order])
+        assert np.all(np.asarray(out.dst)[20:] == SEN), mode
+        assert np.all(np.asarray(out.src)[20:] == SEN), mode
+
+
+def test_convert_bit_identical_across_modes_and_vs_xla():
+    coo, dst, src = _coo(120, 900, cap=1024, seed=3)
+    ref = convert_xla(coo)
+    for mode in ("packed", "two_pass", "auto"):
+        csc = convert(coo, EngineConfig(w_upe=256, sort_mode=mode))
+        np.testing.assert_array_equal(csc.ptr[:121], ref.ptr[:121], mode)
+        np.testing.assert_array_equal(csc.idx[:900], ref.idx[:900], mode)
+
+
+# ---------------------------------------------------------- radix_bits knob
+@pytest.mark.parametrize("radix_bits", [2, 4, 8])
+def test_radix_bits_sweep_bit_identical(radix_bits):
+    """One EngineConfig.radix_bits value routes through both the jnp chunk
+    sorter and (below, via use_pallas) the Pallas kernel — outputs must not
+    depend on the digit width."""
+    coo, dst, src = _coo(90, 700, cap=1024, seed=4)
+    ref = convert(coo, EngineConfig(w_upe=256))  # default radix_bits=4
+    csc = convert(coo, EngineConfig(w_upe=256, radix_bits=radix_bits))
+    np.testing.assert_array_equal(csc.ptr, ref.ptr)
+    np.testing.assert_array_equal(csc.idx, ref.idx)
+
+
+@pytest.mark.parametrize("radix_bits", [2, 8])
+def test_radix_bits_routes_through_pallas_kernel(radix_bits):
+    coo, dst, src = _coo(60, 300, cap=512, seed=5)
+    ref = convert(coo, EngineConfig(w_upe=128))
+    csc = convert(coo, EngineConfig(w_upe=128, radix_bits=radix_bits,
+                                    use_pallas=True))
+    np.testing.assert_array_equal(csc.ptr, ref.ptr)
+    np.testing.assert_array_equal(csc.idx, ref.idx)
+
+
+def test_stable_sort_radix_bits_sweep():
+    rng = np.random.default_rng(6)
+    keys = rng.integers(0, 1009, 512).astype(np.int32)
+    vals = np.arange(512, dtype=np.int32)
+    order = np.argsort(keys, kind="stable")
+    for rb in (2, 4, 8):
+        ks, vs = stable_sort_by_key(jnp.array(keys), jnp.array(vals),
+                                    key_bound=1024, chunk=128,
+                                    radix_bits=rb)
+        np.testing.assert_array_equal(ks, keys[order], rb)
+        np.testing.assert_array_equal(vs, order, rb)
+
+
+# ------------------------------------------------------------ gather router
+def test_gather_router_inverse_randomized():
+    """Deterministic sweep of the permutation-inverse property (the
+    hypothesis version lives in test_perf_paths.py)."""
+    rng = np.random.default_rng(7)
+    for _ in range(25):
+        n = int(rng.integers(1, 400))
+        nb = int(rng.choice([2, 4, 8, 16, 256]))
+        k = rng.integers(0, nb, n).astype(np.int32)
+        onehot = (k[:, None] == np.arange(nb)[None, :]).astype(np.int32)
+        incl = np.cumsum(onehot, axis=0)
+        hist = onehot.sum(axis=0)
+        base = (np.cumsum(hist) - hist).astype(np.int32)
+        src = np.asarray(gather_sources_from_counts(jnp.array(incl),
+                                                    jnp.array(base)))
+        dest = (incl - onehot)[np.arange(n), k] + base[k]
+        np.testing.assert_array_equal(src[dest], np.arange(n))
+        np.testing.assert_array_equal(dest[src], np.arange(n))
+
+
+# ------------------------------------------------------------- fused merge
+@pytest.mark.parametrize("n,run,max_block", [(1024, 64, 65536),
+                                             (1024, 64, 256),
+                                             (512, 512, 65536),
+                                             (2048, 32, 512)])
+def test_fused_merge_rounds_matches_jnp_tree(n, run, max_block):
+    from repro.kernels.merge import fused_merge_rounds
+    rng = np.random.default_rng(8)
+    keys = rng.integers(0, 1000, n).astype(np.int32)
+    kr = keys.reshape(-1, run)
+    order = (np.argsort(kr, axis=1, kind="stable")
+             + (np.arange(n // run) * run)[:, None])
+    k0 = jnp.array(np.sort(kr, axis=1).reshape(-1))
+    v0 = jnp.array(order.reshape(-1).astype(np.int32))
+    ref_k, ref_v = merge_rounds(k0, v0, run)
+    got_k, got_v = merge_rounds(
+        k0, v0, run,
+        merge_fn=lambda k, v, r: fused_merge_rounds(k, v, r,
+                                                    max_block=max_block))
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(ref_k))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(ref_v))
+
+
+def test_full_pallas_sort_stack_bit_identical():
+    """Pallas chunk sort + fused VMEM merges == jnp path, end to end."""
+    coo, dst, src = _coo(80, 600, cap=1024, seed=9)
+    for mode in ("packed", "two_pass"):
+        ref = convert(coo, EngineConfig(w_upe=256, sort_mode=mode))
+        got = convert(coo, EngineConfig(w_upe=256, sort_mode=mode,
+                                        use_pallas=True))
+        np.testing.assert_array_equal(got.ptr, ref.ptr, mode)
+        np.testing.assert_array_equal(got.idx, ref.idx, mode)
+
+
+def test_preprocess_modes_bit_identical_end_to_end():
+    """The full pipeline (Selecting/Reindexing included) is mode-invariant:
+    same sampled subgraph bit-for-bit."""
+    from repro.core import preprocess
+    coo, dst, src = _coo(150, 1200, cap=2048, seed=10)
+    bn = jnp.arange(8, dtype=jnp.int32)
+    key = jax.random.PRNGKey(0)
+    subs = [preprocess(coo, bn, (4, 3), key,
+                       EngineConfig(w_upe=256, sort_mode=m))
+            for m in ("packed", "two_pass")]
+    np.testing.assert_array_equal(np.asarray(subs[0].order),
+                                  np.asarray(subs[1].order))
+    np.testing.assert_array_equal(np.asarray(subs[0].csc.ptr),
+                                  np.asarray(subs[1].csc.ptr))
+    np.testing.assert_array_equal(np.asarray(subs[0].csc.idx),
+                                  np.asarray(subs[1].csc.idx))
+    assert int(subs[0].n_sub_nodes) == int(subs[1].n_sub_nodes)
