@@ -1,0 +1,176 @@
+"""Serving microbench — continuous batching vs the sequential loop.
+
+Emits ``BENCH_serve.json`` (repo root): tokens/s for the same mixed-length
+request stream served (a) one request at a time through a batch-1 decode
+loop (what ``launch/serve.py`` did before ``repro.serve``) and (b) by the
+continuous batcher (``serve.ServeEngine`` — admission/prefill/decode/
+retirement in one jitted slot step), plus admission-latency percentiles
+and the compiled-program count after warmup (must stay at 1: admission
+never recompiles). CPU-host proxy numbers — the batched-vs-sequential
+contrast is schedule-level (weight reads amortized over slots) and
+survives the TPU port.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.transformer import lm_decode_step, lm_init, make_cache
+from repro.serve import ServeEngine
+
+try:
+    from .common import emit
+except ImportError:  # script mode: python benchmarks/bench_serve.py
+    from common import emit
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serve.json")
+
+ARCH = "gemma2-9b"
+
+
+def make_requests(n: int, prompt_cap: int, gen_cap: int, vocab: int,
+                  seed: int = 0) -> list[tuple[list[int], int]]:
+    """Mixed-length request stream: (prompt ids, max_new) pairs."""
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, vocab, int(rng.integers(1, prompt_cap + 1))
+                          ).tolist(), int(rng.integers(1, gen_cap + 1)))
+            for _ in range(n)]
+
+
+def run_sequential(cfg, params, reqs, max_len: int) -> tuple[int, float]:
+    """The pre-batcher serve loop: one request at a time, batch-1 cache.
+
+    The cache buffer is reused across requests without a reset (positions
+    mask stale entries — the same property slot reuse relies on), so this
+    baseline also compiles exactly once; it loses on throughput, not on
+    compile count.
+    """
+    dec = jax.jit(lambda p, c, t, pos: lm_decode_step(cfg, p, c, t, pos),
+                  donate_argnums=(1,))
+    cache = make_cache(cfg, batch=1, max_len=max_len)
+    # warmup compile outside the timed region
+    tok, cache = dec(params, cache, jnp.zeros((1, 1), jnp.int32),
+                     jnp.int32(0))
+    jax.block_until_ready(tok)
+    total = 0
+    t0 = time.perf_counter()
+    for prompt, max_new in reqs:
+        for i, t in enumerate(prompt):
+            tok, cache = dec(params, cache,
+                             jnp.array([[t]], jnp.int32), jnp.int32(i))
+        for i in range(max_new - 1):
+            tok, cache = dec(params, cache, tok,
+                             jnp.int32(len(prompt) + i))
+        total += len(prompt) + max_new
+    jax.block_until_ready(tok)
+    return total, time.perf_counter() - t0
+
+
+def run_batched(cfg, params, reqs, *, n_slots: int, max_len: int,
+                prompt_cap: int) -> dict:
+    """The continuous batcher on the same stream, warmed before timing."""
+    eng = ServeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                      prompt_cap=prompt_cap)
+    # warmup: compile the step/admit programs on two throwaway requests
+    for _ in range(2):
+        eng.submit([1, 2, 3], 2)
+    warm = _drain(eng)
+    assert len(warm) == 2
+    compiled_after_warmup = eng.step_cache_size()
+
+    t0 = time.perf_counter()
+    for prompt, max_new in reqs:
+        eng.submit(prompt, max_new)
+    completed = _drain(eng)
+    dt = time.perf_counter() - t0
+    assert len(completed) == len(reqs)
+    lat_ms = sorted(1e3 * r.admission_latency_s for r in completed)
+
+    def pct(p):
+        return lat_ms[min(len(lat_ms) - 1, int(len(lat_ms) * p / 100))]
+
+    return {
+        "tokens": sum(len(p) + g for p, g in reqs),
+        "seconds": dt,
+        "steps": eng.stats.steps,
+        "compiled_programs": eng.step_cache_size(),
+        "recompiles_after_warmup": eng.step_cache_size()
+        - compiled_after_warmup,
+        "admission_ms": {"p50": pct(50), "p90": pct(90), "p99": pct(99)},
+    }
+
+
+def _drain(eng: ServeEngine) -> list:
+    """Run the engine loop over the currently queued requests, then reopen
+    the stream so warmup and the timed run share one engine (and
+    therefore one jit cache)."""
+    eng.close_submissions()
+    out = eng.run()
+    eng.reopen()
+    return out
+
+
+def run(smoke: bool = True) -> dict:
+    n = 12 if smoke else 32
+    n_slots = 4 if smoke else 8
+    prompt_cap, gen_cap = 16, 12
+    max_len = 64
+    cfg = get_config(ARCH, smoke=True)
+    params = lm_init(cfg, jax.random.PRNGKey(0))
+    reqs = make_requests(n, prompt_cap, gen_cap, cfg.vocab)
+
+    seq_tokens, seq_dt = run_sequential(cfg, params, reqs, max_len)
+    batched = run_batched(cfg, params, reqs, n_slots=n_slots,
+                          max_len=max_len, prompt_cap=prompt_cap)
+
+    seq_tps = seq_tokens / seq_dt
+    bat_tps = batched["tokens"] / batched["seconds"]
+    speedup = bat_tps / seq_tps
+    emit("serve/sequential_tok_s", seq_tps, f"n={n}")
+    emit("serve/batched_tok_s", bat_tps,
+         f"n={n},slots={n_slots},steps={batched['steps']}")
+    emit("serve/speedup_batched_vs_sequential", speedup, f"n={n}")
+    emit("serve/admission_p50_ms", batched["admission_ms"]["p50"], "")
+    emit("serve/admission_p99_ms", batched["admission_ms"]["p99"], "")
+    emit("serve/recompiles_after_warmup",
+         batched["recompiles_after_warmup"], "must be 0")
+
+    results = {
+        "arch": ARCH,
+        "workload": {"n_requests": n, "n_slots": n_slots,
+                     "prompt_cap": prompt_cap, "gen_cap": gen_cap,
+                     "max_len": max_len},
+        "sequential_tok_s": seq_tps,
+        "batched_tok_s": bat_tps,
+        "speedup_batched_vs_sequential": speedup,
+        "steps": batched["steps"],
+        "compiled_programs": batched["compiled_programs"],
+        "recompiles_after_warmup": batched["recompiles_after_warmup"],
+        "admission_ms": batched["admission_ms"],
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    jax.config.update("jax_platform_name", "cpu")
+    print("name,us_per_call,derived")
+    r = run(smoke=args.smoke)
+    print(f"continuous batching: {r['speedup_batched_vs_sequential']:.2f}x "
+          f"sequential ({r['batched_tok_s']:.1f} vs "
+          f"{r['sequential_tok_s']:.1f} tok/s)")

@@ -12,12 +12,13 @@ def main() -> None:
     import jax
     jax.config.update("jax_platform_name", "cpu")
 
-    from . import (bench_convert, fig5_preproc_fraction, fig6_breakdown,
-                   fig10_serialization, fig18_end2end, fig22_reconfig,
-                   fig24_costmodel, fig25_sensitivity, fig_engine_overlap,
-                   roofline)
+    from . import (bench_convert, bench_serve, fig5_preproc_fraction,
+                   fig6_breakdown, fig10_serialization, fig18_end2end,
+                   fig22_reconfig, fig24_costmodel, fig25_sensitivity,
+                   fig_engine_overlap, roofline)
     suites = {
         "convert": bench_convert.run,  # emits BENCH_convert.json
+        "serve": bench_serve.run,  # emits BENCH_serve.json
         "fig5": fig5_preproc_fraction.run,
         "fig6": fig6_breakdown.run,
         "fig10": fig10_serialization.run,

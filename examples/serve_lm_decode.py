@@ -1,49 +1,46 @@
-"""Serve a small LM with batched requests: prefill + greedy decode loop.
+"""Serve a small LM through the continuous batcher (`repro.serve`).
 
     PYTHONPATH=src python examples/serve_lm_decode.py
 
-Uses the gemma2 smoke config (local+global alternating attention, softcaps,
-int8-ready KV cache machinery) — the same `lm_decode_step` the decode_32k /
-long_500k dry-run cells lower at production scale.
+Submits a burst of mixed-length requests to a ``ServeEngine`` — admission,
+teacher-forced prefill, greedy decode and retirement all run inside ONE
+jitted slot step (per-slot position vectors through `lm_decode_step`), so
+the whole burst is served with a single compiled program. Uses the gemma2
+smoke config (local+global alternating attention, softcaps, int8-ready KV
+cache machinery) — the same decode step the decode_32k / long_500k dry-run
+cells lower at production scale.
 """
 import sys
 
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
-from repro.models.transformer import (lm_decode_step, lm_init, make_cache)
+from repro.models.transformer import lm_init
+from repro.serve import ServeEngine
 
-BATCH, PROMPT_LEN, GEN = 4, 12, 20
+N_REQUESTS, MAX_PROMPT, MAX_GEN = 8, 16, 20
 
 cfg = get_config("gemma2-9b", smoke=True)
 params = lm_init(cfg, jax.random.PRNGKey(0))
 
-# batched "requests": random prompts
-prompts = jax.random.randint(jax.random.PRNGKey(1), (BATCH, PROMPT_LEN), 0,
-                             cfg.vocab)
+# 4 slots serving 8 requests: the second wave is admitted as the first
+# retires — no pipeline drain, no recompile
+eng = ServeEngine(cfg, params, n_slots=4, max_len=64, prompt_cap=MAX_PROMPT)
+rng = np.random.default_rng(1)
+for _ in range(N_REQUESTS):
+    prompt = rng.integers(0, cfg.vocab, int(rng.integers(2, MAX_PROMPT + 1)))
+    eng.submit(prompt.tolist(), int(rng.integers(4, MAX_GEN + 1)))
+eng.close_submissions()
+completed = eng.run()
 
-decode = jax.jit(lambda p, c, t, pos: lm_decode_step(cfg, p, c, t, pos))
-
-# prefill via the decode path (teacher-forcing the prompt tokens)
-cache = make_cache(cfg, batch=BATCH, max_len=PROMPT_LEN + GEN)
-tok = prompts[:, :1]
-for i in range(PROMPT_LEN):
-    nxt, cache = decode(params, cache, prompts[:, i:i + 1], jnp.int32(i))
-
-# greedy generation
-generated = []
-tok = nxt
-for i in range(GEN):
-    tok, cache = decode(params, cache, tok, jnp.int32(PROMPT_LEN + i))
-    generated.append(tok)
-
-out = jnp.concatenate(generated, axis=1)
 print("generated token ids per request:")
-for b in range(BATCH):
-    print(f"  req{b}: {out[b].tolist()}")
-assert out.shape == (BATCH, GEN)
-assert bool(jnp.all((out >= 0) & (out < cfg.vocab)))
-print("OK")
+for req in sorted(completed, key=lambda r: r.rid):
+    print(f"  req{req.rid}: {req.tokens_out}")
+assert len(completed) == N_REQUESTS
+assert all(0 <= t < cfg.vocab for r in completed for t in r.tokens_out)
+assert eng.step_cache_size() == 1  # one program served every request shape
+print(f"OK ({eng.stats.steps} steps, "
+      f"{eng.stats.tokens_processed} tokens processed)")

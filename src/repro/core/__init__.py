@@ -15,7 +15,8 @@ The paper's contribution as composable JAX modules:
 from .graph import COO, CSC, SENTINEL, Subgraph, next_pow2, pad_to, random_coo
 from .set_partition import (displacement, gather_sources_from_counts,
                             partition_indices, radix_partition,
-                            radix_sort_by_key, set_partition)
+                            radix_sort_by_key, radix_sort_keys,
+                            set_partition)
 from .set_count import (count_equal, count_less_than, filter_lookup,
                         searchsorted_oracle)
 from .ordering import (edge_ordering, edge_ordering_xla, merge_sorted,

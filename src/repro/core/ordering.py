@@ -39,11 +39,21 @@ import jax.numpy as jnp
 
 from .graph import COO, SENTINEL
 from .set_count import rank_in_sorted
-from .set_partition import radix_sort_by_key
+from .set_partition import radix_sort_by_key, radix_sort_keys
 
 
 def _bits_for(n: int) -> int:
     return max(1, int(n).bit_length())
+
+
+# Keys-only contract: everywhere a (keys, vals) pair flows through the sort
+# stack — merge_sorted, _chunk_sort, merge_rounds, stable_sort_by_key and
+# the chunk_sort_fn / merge_fn / sort_fn hooks — ``vals=None`` selects a
+# keys-only variant that routes no payload through the gathers. The packed
+# Ordering uses it: the packed (dst, src) key IS the data, so the edge-id
+# payload the two-pass scheme needs would be sorted and then discarded,
+# roughly doubling the bytes every chunk sort and merge round moves
+# (guarded by a compiled-HLO bytes-accessed test in tests/test_perf_paths.py).
 
 
 def supports_packed_keys(n_nodes: int) -> bool:
@@ -60,6 +70,9 @@ def merge_sorted(a_keys, a_vals, b_keys, b_vals):
     at slots ≤ j is one more binary search; slot j holds ``a[r_a - 1]`` when
     that element sits exactly at j, else ``b[j - r_a]``. Relocation is two
     gathers — the inverse-permutation router — instead of four scatters.
+
+    ``a_vals``/``b_vals`` may both be None (keys-only merge, the packed
+    Ordering path); then ``out_v`` is None and no payload bytes move.
     """
     la = a_keys.shape[0]
     lb = b_keys.shape[0]
@@ -77,6 +90,8 @@ def merge_sorted(a_keys, a_vals, b_keys, b_vals):
     ib = jnp.clip(j - r_a, 0, lb - 1)
     out_k = jnp.where(from_a, jnp.take(a_keys, ia, mode="clip"),
                       jnp.take(b_keys, ib, mode="clip"))
+    if a_vals is None:
+        return out_k, None
     sel = from_a.reshape((n,) + (1,) * (a_vals.ndim - 1))
     out_v = jnp.where(sel, jnp.take(a_vals, ia, axis=0, mode="clip"),
                       jnp.take(b_vals, ib, axis=0, mode="clip"))
@@ -90,11 +105,22 @@ def _chunk_sort(keys, vals, chunk: int, key_bits: int, radix_bits: int,
     ``map_batch`` = UPE lane count: chunks are processed ``map_batch`` at a
     time (lax.map batching bounds working-set memory). map_batch <= 0 means
     all lanes at once (full vmap — the distributed/sharded configuration,
-    where the chunk axis is sharded over devices).
+    where the chunk axis is sharded over devices). ``vals=None`` sorts the
+    keys alone (no payload gather per digit pass).
     """
     n = keys.shape[0]
     assert n % chunk == 0, (n, chunk)
     kc = keys.reshape(-1, chunk)
+    if vals is None:
+        def sort_keys(k):
+            return radix_sort_keys(k, key_bits=key_bits,
+                                   radix_bits=radix_bits)
+
+        if map_batch <= 0 or map_batch >= kc.shape[0]:
+            ks = jax.vmap(sort_keys)(kc)
+        else:
+            ks = jax.lax.map(sort_keys, kc, batch_size=map_batch)
+        return ks.reshape(n), None
     vc = vals.reshape(-1, chunk)
 
     def sort_one(k, v):
@@ -119,19 +145,25 @@ def merge_rounds(ks: jnp.ndarray, vs: jnp.ndarray, run: int,
     (large-run) rounds run at the jnp level. Shared by the single-device
     sorter below and the mesh-sharded sorter (engine/shard.py), which
     continues this exact tree from its per-device runs — one implementation
-    keeps the bit-identical guarantee honest.
+    keeps the bit-identical guarantee honest. ``vs=None`` merges keys alone
+    (``merge_fn`` implementations accept and return the None payload).
     """
     n = ks.shape[0]
     if merge_fn is not None and run < n:
         ks, vs, run = merge_fn(ks, vs, run)
     while run < n:
         kr = ks.reshape(-1, 2, run)
-        vr = vs.reshape(-1, 2, run)
-        ks, vs = jax.vmap(merge_sorted)(kr[:, 0], vr[:, 0], kr[:, 1],
-                                        vr[:, 1])
+        if vs is None:
+            ks = jax.vmap(
+                lambda a, b: merge_sorted(a, None, b, None)[0])(
+                    kr[:, 0], kr[:, 1])
+        else:
+            vr = vs.reshape(-1, 2, run)
+            ks, vs = jax.vmap(merge_sorted)(kr[:, 0], vr[:, 0], kr[:, 1],
+                                            vr[:, 1])
+            vs = vs.reshape(n)
         run *= 2
         ks = ks.reshape(n)
-        vs = vs.reshape(n)
     return ks, vs
 
 
@@ -145,6 +177,8 @@ def stable_sort_by_key(keys: jnp.ndarray, vals: jnp.ndarray, key_bound: int,
     to key_bound and restored). ``chunk_sort_fn`` lets the Pallas UPE kernel
     replace the jnp chunk sorter; ``merge_fn`` lets the fused Pallas merge
     kernel absorb the first merge rounds (see ``merge_rounds``).
+    ``vals=None`` runs the whole stack keys-only and returns ``(keys,
+    None)`` — both hooks receive the None payload and must honor it.
     """
     n = keys.shape[0]
     chunk = min(chunk, n)
@@ -165,7 +199,8 @@ def stable_sort_by_key(keys: jnp.ndarray, vals: jnp.ndarray, key_bound: int,
 
 def edge_ordering(coo: COO, chunk: int = 4096, radix_bits: int = 4,
                   map_batch: int = 4, chunk_sort_fn=None,
-                  sort_fn=None, merge_fn=None, mode: str = "auto") -> COO:
+                  sort_fn=None, merge_fn=None, mode: str = "auto",
+                  keys_only: bool = True) -> COO:
     """Sort edges by (dst, src) — packed single-pass or two-pass LSD.
 
     ``sort_fn(keys, vals, key_bound) -> (keys, vals)`` overrides the global
@@ -173,6 +208,10 @@ def edge_ordering(coo: COO, chunk: int = 4096, radix_bits: int = 4,
     both paths share ONE copy of the packing/two-pass/sentinel-restore
     logic. ``mode``: "auto" (packed when the VID space fits), "packed", or
     "two_pass"; requesting "packed" on a too-wide VID space raises.
+    ``keys_only`` (packed mode only): sort the packed key with no payload —
+    the (dst, src) pair is recovered by unpacking the key itself, so the
+    edge-id payload the two-pass scheme rides along would be pure waste;
+    False retained for A/B bytes-moved measurement.
     """
     if sort_fn is None:
         def sort_fn(k, v, bound):
@@ -195,8 +234,11 @@ def edge_ordering(coo: COO, chunk: int = 4096, radix_bits: int = 4,
         d = jnp.minimum(coo.dst, jnp.int32(bound))
         s = jnp.minimum(coo.src, jnp.int32(bound))
         packed = (d << bits) | s
-        edge_id = jnp.arange(coo.capacity, dtype=jnp.int32)
-        pk, _ = sort_fn(packed, edge_id, (bound << bits) | bound)
+        if keys_only:  # the packed key IS the data — no payload to move
+            payload = None
+        else:  # A/B baseline: ride the (discarded) edge id along
+            payload = jnp.arange(coo.capacity, dtype=jnp.int32)
+        pk, _ = sort_fn(packed, payload, (bound << bits) | bound)
         # unpack; all-sentinel rows were restored to SENTINEL by the sorter
         mask = (1 << bits) - 1
         sent = pk == SENTINEL

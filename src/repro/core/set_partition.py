@@ -166,3 +166,25 @@ def radix_sort_by_key(values: jnp.ndarray, keys: jnp.ndarray, key_bits: int,
     (k, v, _), _ = jax.lax.scan(
         body, (keys, values, jnp.int32(0)), None, length=n_passes)
     return k, v
+
+
+def radix_sort_keys(keys: jnp.ndarray, key_bits: int,
+                    radix_bits: int = 4) -> jnp.ndarray:
+    """Keys-only LSD radix sort — ``radix_sort_by_key`` without a payload.
+
+    The packed-key Ordering discards its payload after sorting (the packed
+    (dst, src) key IS the data), so routing only the keys through the
+    per-pass gather halves the bytes moved per digit pass.
+    """
+    n_buckets = 1 << radix_bits
+    n_passes = max(1, -(-key_bits // radix_bits))  # ceil div
+
+    def body(carry, _):
+        k, shift = carry
+        digit = (k >> shift) & (n_buckets - 1)
+        src, _ = digit_relocation_sources(digit, n_buckets)
+        return (jnp.take(k, src, mode="clip"), shift + radix_bits), None
+
+    (k, _), _ = jax.lax.scan(body, (keys, jnp.int32(0)), None,
+                             length=n_passes)
+    return k

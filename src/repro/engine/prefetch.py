@@ -62,6 +62,13 @@ class Prefetcher:
 
     ``depth`` bounds the lookahead (1 = classic double buffer: the producer
     works on batch ``i+1`` while the consumer holds batch ``i``).
+
+    Example — batches arrive in step order, producer overlapped::
+
+        >>> with Prefetcher(lambda step: step * 10, stop=3,
+        ...                 device_put=False) as pf:
+        ...     list(pf)
+        [(0, 0), (1, 10), (2, 20)]
     """
 
     def __init__(self, batch_fn: Callable[[int], Any], start: int = 0,
@@ -130,7 +137,14 @@ class Prefetcher:
 class SyncBatches:
     """Synchronous twin of ``Prefetcher``: same ``(step, batch)`` iterator
     and context-manager protocol, no producer thread. Lets callers switch
-    overlap on/off without changing their iteration code."""
+    overlap on/off without changing their iteration code.
+
+    Example::
+
+        >>> with SyncBatches(lambda step: step + 100, stop=2) as it:
+        ...     list(it)
+        [(0, 100), (1, 101)]
+    """
 
     def __init__(self, batch_fn: Callable[[int], Any], start: int = 0,
                  stop: int | None = None):
@@ -162,7 +176,14 @@ def prefetch_batches(batch_fn: Callable[[int], Any], start: int = 0,
                      stop: int | None = None, depth: int = 1,
                      device_put: bool = True) -> Iterator[tuple[int, Any]]:
     """Generator form: yields ``(step, batch)`` in step order, producer
-    always one batch ahead; closes the producer on generator exit."""
+    always one batch ahead; closes the producer on generator exit.
+
+    Example::
+
+        >>> list(prefetch_batches(lambda s: s ** 2, stop=3,
+        ...                       device_put=False))
+        [(0, 0), (1, 1), (2, 4)]
+    """
     pf = Prefetcher(batch_fn, start=start, stop=stop, depth=depth,
                     device_put=device_put)
     try:

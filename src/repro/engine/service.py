@@ -47,7 +47,13 @@ convert_jit = jax.jit(pipeline.convert, static_argnames=("cfg",))
 
 def preprocess_cache_size() -> int:
     """Number of compiled programs behind the module-level preprocess entry
-    (the compile-counter tests assert against)."""
+    (the compile-counter tests assert against).
+
+    Example::
+
+        >>> isinstance(preprocess_cache_size(), int)
+        True
+    """
     try:
         return int(preprocess_jit._cache_size())
     except AttributeError as e:  # private PjitFunction API (jax upgrade?)
@@ -58,7 +64,19 @@ def preprocess_cache_size() -> int:
 
 
 def bucket_coo(coo: COO) -> COO:
-    """Pad the edge buffer to its pow2 capacity bucket (SENTINEL tail)."""
+    """Pad the edge buffer to its pow2 capacity bucket (SENTINEL tail).
+
+    Example::
+
+        >>> from repro.core.graph import COO
+        >>> coo = COO.from_arrays([0, 2, 1], [1, 0, 2], n_nodes=3,
+        ...                       capacity=3)
+        >>> b = bucket_coo(coo)
+        >>> b.capacity, int(b.n_edges)
+        (4, 3)
+        >>> bucket_coo(b) is b  # already-pow2 buffers pass through
+        True
+    """
     cap = next_pow2(coo.capacity)
     if cap == coo.capacity:
         return coo
@@ -70,7 +88,17 @@ def bucket_coo(coo: COO) -> COO:
 def bucket_batch(batch_nodes: jnp.ndarray) -> jnp.ndarray:
     """Pad the seed-node list to its pow2 bucket with SENTINEL (sentinel
     seeds have degree 0 and never claim new VIDs, so real batch nodes keep
-    the first new VIDs exactly as with the unpadded batch)."""
+    the first new VIDs exactly as with the unpadded batch).
+
+    Example::
+
+        >>> import jax.numpy as jnp
+        >>> b = bucket_batch(jnp.arange(3, dtype=jnp.int32))
+        >>> b.shape
+        (4,)
+        >>> b[:3].tolist()  # real seeds unchanged, SENTINEL tail
+        [0, 1, 2]
+    """
     cap = next_pow2(batch_nodes.shape[0])
     if cap == batch_nodes.shape[0]:
         return batch_nodes
@@ -79,6 +107,15 @@ def bucket_batch(batch_nodes: jnp.ndarray) -> jnp.ndarray:
 
 @dataclasses.dataclass
 class ServiceStats:
+    """Dispatch counters one :class:`PreprocService` accumulates.
+
+    Example::
+
+        >>> s = ServiceStats()
+        >>> (s.n_dispatches, s.n_reconfigs, s.n_unique_keys)
+        (0, 0, 0)
+    """
+
     n_dispatches: int = 0
     n_reconfigs: int = 0
     n_unique_keys: int = 0  # distinct (EngineConfig.key, bucket) pairs
@@ -91,6 +128,21 @@ class PreprocService:
     module-level jit caches. When constructed with a ``mesh`` whose dp
     extent is > 1, dispatches route through the sharded engine
     (``engine.shard``); otherwise through the single-device pipeline.
+
+    Example — profile, score, dispatch (paper's DynPre mode)::
+
+        >>> import jax, jax.numpy as jnp, numpy as np
+        >>> from repro.core.graph import COO, random_coo
+        >>> rng = np.random.default_rng(0)
+        >>> dst, src = random_coo(rng, 64, 200)
+        >>> coo = COO.from_arrays(dst, src, 64, capacity=256)
+        >>> svc = PreprocService(fanouts=(2, 2))
+        >>> sub = svc.preprocess(coo, jnp.arange(4, dtype=jnp.int32),
+        ...                      jax.random.PRNGKey(0))
+        >>> int(sub.order[0])  # seed nodes keep the first new VIDs
+        0
+        >>> svc.stats.n_dispatches, svc.stats.n_unique_keys
+        (1, 1)
     """
 
     def __init__(self, fanouts: tuple[int, ...],
@@ -119,17 +171,47 @@ class PreprocService:
         bucket — that is what bounds the number of compiled programs to
         O(log(max_e) · log(max_b)): every graph in a bucket re-selects the
         same ``(EngineConfig.key, bucket)`` pair and hits the jit cache.
+
+        Example::
+
+            >>> from repro.core.graph import COO
+            >>> coo = COO.from_arrays([0, 1], [1, 0], n_nodes=2,
+            ...                       capacity=3)
+            >>> svc = PreprocService(fanouts=(2,))
+            >>> svc.profile(coo, batch_size=8, bucketed=True).e
+            4
+            >>> svc.profile(coo, batch_size=8).e  # exact edge count
+            2
         """
         e = next_pow2(coo.capacity) if bucketed else int(coo.n_edges)
         return Workload(n=coo.n_nodes, e=e, l=len(self.fanouts),
                         k=max(self.fanouts), b=batch_size)
 
     def decide(self, w: Workload) -> ReconfigDecision:
+        """Score ``w`` against the library (Table-I cost model) and decide
+        whether the predicted gain amortizes the reconfiguration cost.
+
+        Example::
+
+            >>> svc = PreprocService(fanouts=(2,))
+            >>> d = svc.decide(Workload(n=100, e=1000, l=1, k=2, b=16))
+            >>> d.config in svc.library
+            True
+        """
         return decide(w, self.active_cfg, self.library, self.cal,
                       self.threshold, self.reconfig_cost_s)
 
     def select(self, coo: COO, batch_size: int) -> EngineConfig:
-        """Profile + score; switch the active configuration if warranted."""
+        """Profile + score; switch the active configuration if warranted.
+
+        Example::
+
+            >>> from repro.core.graph import COO
+            >>> coo = COO.from_arrays([0, 1], [1, 0], n_nodes=2)
+            >>> svc = PreprocService(fanouts=(2,))
+            >>> svc.select(coo, batch_size=16) is svc.active_cfg
+            True
+        """
         d = self.decide(self.profile(coo, batch_size, bucketed=True))
         if d.reconfigure or self.active_cfg is None:
             self.active_cfg = d.config
@@ -143,7 +225,12 @@ class PreprocService:
 
     def preprocess(self, coo: COO, batch_nodes: jnp.ndarray, key: jax.Array,
                    cfg: EngineConfig | None = None):
-        """Bucket, select, dispatch. Returns the sampled ``Subgraph``."""
+        """Bucket, select, dispatch. Returns the sampled ``Subgraph``.
+
+        Passing an explicit ``cfg`` pins the configuration (the paper's
+        StatPre/AutoPre modes); omitting it runs DynPre selection. See the
+        class docstring for a runnable end-to-end example.
+        """
         coo_b = bucket_coo(coo)
         bn_b = bucket_batch(jnp.asarray(batch_nodes, jnp.int32))
         cfg = cfg or self.select(coo_b, int(bn_b.shape[0]))
@@ -159,4 +246,12 @@ class PreprocService:
 
     @staticmethod
     def cache_size() -> int:
+        """Alias for :func:`preprocess_cache_size` (all services share the
+        one module-level cache).
+
+        Example::
+
+            >>> PreprocService.cache_size() == preprocess_cache_size()
+            True
+        """
         return preprocess_cache_size()

@@ -66,7 +66,22 @@ def shard_sort_by_key(mesh: Mesh, keys: jnp.ndarray, vals: jnp.ndarray,
     rounds stay at the jnp level — they are collective by construction).
     Falls back to the single-device sorter — honoring ``map_batch`` (the
     UPE lane bound) there — when the mesh has no dp extent or the buffer
-    does not divide.
+    does not divide. ``vals=None`` runs the whole sharded stack keys-only
+    (the packed Ordering path: no payload crosses a device boundary).
+
+    Example (1-device mesh exercises the fallback; an n-device mesh is
+    bit-identical by the stable-sort argument above)::
+
+        >>> import jax, jax.numpy as jnp
+        >>> mesh = jax.make_mesh((1,), ("data",))
+        >>> ks, vs = shard_sort_by_key(mesh, jnp.array([3, 1, 2, 0]),
+        ...                            jnp.arange(4), key_bound=4, chunk=4)
+        >>> ks.tolist(), vs.tolist()
+        ([0, 1, 2, 3], [3, 1, 2, 0])
+        >>> ks, none = shard_sort_by_key(mesh, jnp.array([3, 1, 2, 0]),
+        ...                              None, key_bound=4, chunk=4)
+        >>> none is None  # keys-only: no payload moved
+        True
     """
     n = keys.shape[0]
     dp, nd = _dp(mesh)
@@ -81,6 +96,21 @@ def shard_sort_by_key(mesh: Mesh, keys: jnp.ndarray, vals: jnp.ndarray,
     chunk = min(chunk, local)
     key_bits = _bits_for(key_bound)
     clipped = jnp.minimum(keys, jnp.int32(key_bound))
+
+    if vals is None:
+        def local_run_keys(k_l):
+            if chunk_sort_fn is None:
+                ks, _ = _chunk_sort(k_l, None, chunk, key_bits, radix_bits,
+                                    map_batch=0)
+            else:
+                ks, _ = chunk_sort_fn(k_l, None, chunk, key_bits)
+            ks, _ = merge_rounds(ks, None, chunk, merge_fn=merge_fn)
+            return ks
+
+        fn = shard_map(local_run_keys, mesh=mesh, in_specs=(P(dp),),
+                       out_specs=P(dp), check_vma=False)
+        ks, _ = merge_rounds(fn(clipped), None, local)
+        return jnp.where(ks >= key_bound, SENTINEL, ks), None
 
     def local_run(k_l, v_l):
         if chunk_sort_fn is None:
@@ -108,7 +138,18 @@ def shard_edge_ordering(mesh: Mesh, coo: COO,
                         cfg: EngineConfig | None = None) -> COO:
     """Sharded edge Ordering: ``core.ordering.edge_ordering``'s key scheme
     (packed single-pass or two-pass LSD, per ``cfg.sort_mode``) with the
-    global sorter swapped for the shard_map one."""
+    global sorter swapped for the shard_map one.
+
+    Example::
+
+        >>> import jax
+        >>> from repro.core.graph import COO
+        >>> mesh = jax.make_mesh((1,), ("data",))
+        >>> coo = COO.from_arrays([1, 0, 1, 0], [1, 1, 0, 0], n_nodes=2)
+        >>> s = shard_edge_ordering(mesh, coo)
+        >>> s.dst.tolist(), s.src.tolist()  # sorted by (dst, src)
+        ([0, 0, 1, 1], [0, 1, 0, 1])
+    """
     cfg = cfg or EngineConfig()
     chunk_sort_fn, _, merge_fn = _kernel_fns(cfg)
 
@@ -127,7 +168,16 @@ def shard_pointer_array(mesh: Mesh, sorted_dst: jnp.ndarray,
     """Sharded Reshaping: ptr[v] = rank of v in the sorted dst stream, the
     target range tiled over devices (each shard one SCR tile row-block).
     ``count_fn`` swaps in the Pallas SCR kernel (same contract as
-    ``core.reshaping.build_pointer_array``)."""
+    ``core.reshaping.build_pointer_array``).
+
+    Example::
+
+        >>> import jax, jax.numpy as jnp
+        >>> mesh = jax.make_mesh((1,), ("data",))
+        >>> shard_pointer_array(mesh, jnp.array([0, 0, 1, 1]),
+        ...                     n_nodes=2).tolist()
+        [0, 2, 4]
+    """
     dp, nd = _dp(mesh)
     targets = jnp.arange(n_nodes + 1, dtype=jnp.int32)
     if nd <= 1:
@@ -149,7 +199,18 @@ def shard_pointer_array(mesh: Mesh, sorted_dst: jnp.ndarray,
 
 def shard_convert(mesh: Mesh, coo: COO,
                   cfg: EngineConfig | None = None) -> CSC:
-    """Sharded graph conversion: Ordering + Reshaping over the dp axes."""
+    """Sharded graph conversion: Ordering + Reshaping over the dp axes.
+
+    Example::
+
+        >>> import jax
+        >>> from repro.core.graph import COO
+        >>> mesh = jax.make_mesh((1,), ("data",))
+        >>> coo = COO.from_arrays([1, 0, 1, 0], [1, 1, 0, 0], n_nodes=2)
+        >>> csc = shard_convert(mesh, coo)
+        >>> csc.ptr.tolist(), csc.idx.tolist()
+        ([0, 2, 4], [0, 1, 0, 1])
+    """
     cfg = cfg or EngineConfig()
     _, count_fn, _ = _kernel_fns(cfg)
     sorted_coo = shard_edge_ordering(mesh, coo, cfg)
@@ -168,6 +229,17 @@ def shard_preprocess(mesh: Mesh, coo: COO, batch_nodes: jnp.ndarray,
     cfg)``: the sharded sort/rank stages produce the exact same CSC, and
     Selecting/Reindexing run the identical program on it. Falls back to the
     single-device pipeline when the mesh cannot shard this buffer.
+
+    Example::
+
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.core.graph import COO
+        >>> mesh = jax.make_mesh((1,), ("data",))
+        >>> coo = COO.from_arrays([1, 0, 1, 0], [1, 1, 0, 0], n_nodes=2)
+        >>> sub = shard_preprocess(mesh, coo, jnp.array([0], jnp.int32),
+        ...                        fanouts=(1,), key=jax.random.PRNGKey(0))
+        >>> int(sub.order[0])  # the seed keeps VID 0
+        0
     """
     _, nd = _dp(mesh)
     if nd <= 1 or coo.capacity % nd:
@@ -182,6 +254,13 @@ def jit_shard_preprocess(mesh: Mesh):
 
     Cached on the mesh so repeated service dispatches hit one jit wrapper
     (the sharded analog of the module-level single-device cache).
+
+    Example::
+
+        >>> import jax
+        >>> mesh = jax.make_mesh((1,), ("data",))
+        >>> jit_shard_preprocess(mesh) is jit_shard_preprocess(mesh)
+        True
     """
     return jax.jit(partial(shard_preprocess, mesh),
                    static_argnames=("fanouts", "cfg"))

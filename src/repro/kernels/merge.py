@@ -32,7 +32,22 @@ from .common import INTERPRET
 DEFAULT_MAX_BLOCK = 65536
 
 
-def _make_kernel(run: int, rounds: int):
+def _make_kernel(run: int, rounds: int, keys_only: bool = False):
+    if keys_only:
+        def kernel(key_ref, out_key_ref):
+            ks = key_ref[...]
+            r = run
+            for _ in range(rounds):  # static rounds, runs stay resident
+                kr = ks.reshape(-1, 2, r)
+                ks = jax.vmap(
+                    lambda a, b: merge_sorted(a, None, b, None)[0])(
+                        kr[:, 0], kr[:, 1])
+                r *= 2
+                ks = ks.reshape(-1)
+            out_key_ref[...] = ks
+
+        return kernel
+
     def kernel(key_ref, val_ref, out_key_ref, out_val_ref):
         ks = key_ref[...]
         vs = val_ref[...]
@@ -63,7 +78,9 @@ def fused_merge_rounds(keys: jnp.ndarray, vals: jnp.ndarray, run: int,
     pipeline jit, and the merge tree's remaining-round count is static).
     No-op (rounds that don't fit a block run at the jnp level) when even
     one doubling exceeds ``max_block`` or the array does not tile into
-    super-blocks.
+    super-blocks. ``vals=None`` fuses keys-only merge rounds (half the
+    VMEM per super-block, half the HBM bytes per pass — the packed
+    Ordering path).
     """
     n = keys.shape[0]
     block = run
@@ -74,6 +91,16 @@ def fused_merge_rounds(keys: jnp.ndarray, vals: jnp.ndarray, run: int,
     if rounds == 0:
         return keys, vals, run
     grid = n // block
+    if vals is None:
+        out_k = pl.pallas_call(
+            _make_kernel(run, rounds, keys_only=True),
+            grid=(grid,),
+            in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((n,), keys.dtype),
+            interpret=INTERPRET,
+        )(keys)
+        return out_k, None, block
     out_k, out_v = pl.pallas_call(
         _make_kernel(run, rounds),
         grid=(grid,),

@@ -22,12 +22,10 @@ from repro.core.set_partition import digit_relocation_sources
 from .common import INTERPRET, prefix_sum_tree
 
 
-def _make_kernel(n_passes: int, radix_bits: int):
+def _make_kernel(n_passes: int, radix_bits: int, keys_only: bool = False):
     n_buckets = 1 << radix_bits
 
-    def kernel(key_ref, val_ref, out_key_ref, out_val_ref):
-        keys = key_ref[...]
-        vals = val_ref[...]
+    def body(keys, vals):
         for p in range(n_passes):  # static LSD passes
             shift = p * radix_bits
             digit = (keys >> shift) & (n_buckets - 1)
@@ -36,9 +34,17 @@ def _make_kernel(n_passes: int, radix_bits: int):
             src, _ = digit_relocation_sources(digit, n_buckets,
                                               prefix_sum_fn=prefix_sum_tree)
             keys = jnp.take(keys, src, mode="clip")
-            vals = jnp.take(vals, src, mode="clip")
-        out_key_ref[...] = keys
-        out_val_ref[...] = vals
+            if vals is not None:
+                vals = jnp.take(vals, src, mode="clip")
+        return keys, vals
+
+    if keys_only:
+        def kernel(key_ref, out_key_ref):
+            out_key_ref[...], _ = body(key_ref[...], None)
+    else:
+        def kernel(key_ref, val_ref, out_key_ref, out_val_ref):
+            out_key_ref[...], out_val_ref[...] = body(key_ref[...],
+                                                      val_ref[...])
 
     return kernel
 
@@ -75,11 +81,40 @@ def radix_sort_chunks(keys: jnp.ndarray, values: jnp.ndarray, chunk: int,
     return out_k, out_v
 
 
+@partial(jax.jit, static_argnames=("chunk", "key_bits", "radix_bits"))
+def radix_sort_chunks_keys(keys: jnp.ndarray, chunk: int, key_bits: int,
+                           radix_bits: int = 4) -> jnp.ndarray:
+    """Keys-only ``radix_sort_chunks``: one VMEM-resident array per UPE.
+
+    The packed Ordering path sorts a key that carries its own data, so
+    skipping the value stream halves the kernel's VMEM footprint and the
+    bytes each digit pass gathers.
+    """
+    n = keys.shape[0]
+    assert n % chunk == 0, (n, chunk)
+    n_passes = max(1, -(-key_bits // radix_bits))
+    grid = n // chunk
+    return pl.pallas_call(
+        _make_kernel(n_passes, radix_bits, keys_only=True),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((chunk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((chunk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=INTERPRET,
+    )(keys)
+
+
 def make_pallas_chunk_sort_fn(radix_bits: int = 4):
     """chunk_sort_fn for ``core.ordering.stable_sort_by_key`` with the digit
-    width routed from ``EngineConfig.radix_bits`` (one knob, both paths)."""
+    width routed from ``EngineConfig.radix_bits`` (one knob, both paths).
+    Honors the keys-only contract: ``vals=None`` dispatches the keys-only
+    kernel and returns ``(keys, None)``."""
 
     def chunk_sort_fn(keys, vals, chunk, key_bits):
+        if vals is None:
+            return radix_sort_chunks_keys(keys, chunk=chunk,
+                                          key_bits=key_bits,
+                                          radix_bits=radix_bits), None
         return radix_sort_chunks(keys, vals, chunk=chunk, key_bits=key_bits,
                                  radix_bits=radix_bits)
 

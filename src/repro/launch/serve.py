@@ -1,11 +1,14 @@
-"""Serving driver: batched prefill + greedy decode for any LM arch.
+"""Serving driver — a thin CLI over the ``repro.serve`` batcher.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+      --requests 16 --gen 32
 
-Full configs serve with the same code path on TPU meshes (the decode_32k /
-long_500k dry-run cells lower exactly this step function); --smoke runs the
-reduced config end to end on CPU.
+Submits a mixed-length stream of random-token requests to a
+``serve.ServeEngine`` (continuous batching: admission/prefill/decode/
+retirement in one jitted slot step) and reports throughput plus admission
+latency. Full configs serve with the same code path on TPU meshes — the
+decode_32k / long_500k dry-run cells lower exactly this step function;
+--smoke runs the reduced config end to end on CPU.
 """
 from __future__ import annotations
 
@@ -13,51 +16,53 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch, get_config
-from repro.models.transformer import lm_decode_step, lm_init, make_cache
+from repro.models.transformer import lm_init
+from repro.serve import ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="max prompt length; actual lengths are mixed")
+    ap.add_argument("--gen", type=int, default=32,
+                    help="max new tokens; actual budgets are mixed")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     assert get_arch(args.arch).family == "lm", "serving is for LM archs"
     cfg = get_config(args.arch, smoke=args.smoke)
     params = lm_init(cfg, jax.random.PRNGKey(args.seed))
-    max_len = args.prompt_len + args.gen
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(args.seed + 1), (args.batch, args.prompt_len), 0,
-        cfg.vocab)
 
-    decode = jax.jit(lambda p, c, t, pos: lm_decode_step(cfg, p, c, t, pos),
-                     donate_argnums=(1,))
-    cache = make_cache(cfg, batch=args.batch, max_len=max_len)
+    eng = ServeEngine(cfg, params, n_slots=args.slots, max_len=args.max_len,
+                      prompt_cap=args.prompt_len)
+    rng = np.random.default_rng(args.seed + 1)
+    t0 = time.perf_counter()
+    for _ in range(args.requests):
+        plen = int(rng.integers(1, args.prompt_len + 1))
+        gen = int(rng.integers(1, args.gen + 1))
+        eng.submit(rng.integers(0, cfg.vocab, plen).tolist(), gen)
+    eng.close_submissions()
+    completed = eng.run()
+    dt = time.perf_counter() - t0
 
-    t0 = time.time()
-    nxt = None
-    for i in range(args.prompt_len):  # prefill via teacher forcing
-        nxt, cache = decode(params, cache, prompts[:, i:i + 1], jnp.int32(i))
-    out = []
-    tok = nxt
-    for i in range(args.gen):
-        tok, cache = decode(params, cache, tok,
-                            jnp.int32(args.prompt_len + i))
-        out.append(tok)
-    gen = jnp.concatenate(out, axis=1)
-    jax.block_until_ready(gen)
-    dt = time.time() - t0
-    tps = args.batch * (args.prompt_len + args.gen) / dt
-    for b in range(args.batch):
-        print(f"req{b}: {gen[b].tolist()}")
-    print(f"{tps:.1f} tok/s (batch={args.batch}, {dt:.2f}s total)")
+    for req in sorted(completed, key=lambda r: r.rid):
+        print(f"req{req.rid}: prompt_len={req.prompt_len} "
+              f"gen={req.tokens_out}")
+    lat = sorted(r.admission_latency_s for r in completed)
+    tps = eng.stats.tokens_processed / dt
+    print(f"{tps:.1f} tok/s over {len(completed)} requests "
+          f"({eng.stats.steps} steps, {eng.step_cache_size()} compiled "
+          f"programs, {dt:.2f}s total)")
+    print(f"admission latency p50={lat[len(lat) // 2] * 1e3:.2f}ms "
+          f"p99={lat[min(len(lat) - 1, int(len(lat) * 0.99))] * 1e3:.2f}ms")
 
 
 if __name__ == "__main__":

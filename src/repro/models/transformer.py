@@ -277,39 +277,42 @@ def make_cache(cfg: LMConfig, batch: int, max_len: int) -> Params:
 
 
 def _cache_insert(cfg: LMConfig, layer_cache, k, v, pos):
-    """Insert one token's k,v [B,Hkv,1,dh] at ``pos`` (ring for windows)."""
+    """Insert one token's k,v [B,Hkv,1,dh] at ``pos`` (ring for windows).
+
+    ``pos`` is a scalar (all requests at the same position — the dry-run
+    decode cells) or a [B] vector (per-request positions — the continuous
+    batcher, ``repro.serve``). The vector path writes each batch row at its
+    own ring slot via a vmapped dynamic-update (per-row positions have no
+    single-slice formulation).
+    """
     length = layer_cache["k"].shape[-2]
+    pos = jnp.asarray(pos)
     slot = pos % length
     if cfg.kv_cache_dtype == "int8":
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
-        out = {
-            "k": jax.lax.dynamic_update_slice_in_dim(
-                layer_cache["k"], kq, slot, axis=-2),
-            "v": jax.lax.dynamic_update_slice_in_dim(
-                layer_cache["v"], vq, slot, axis=-2),
-            "k_scale": jax.lax.dynamic_update_slice_in_dim(
-                layer_cache["k_scale"], ks, slot, axis=-2),
-            "v_scale": jax.lax.dynamic_update_slice_in_dim(
-                layer_cache["v_scale"], vs, slot, axis=-2),
-        }
+        updates = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
     else:
-        out = {
-            "k": jax.lax.dynamic_update_slice_in_dim(
-                layer_cache["k"], k.astype(jnp.bfloat16), slot, axis=-2),
-            "v": jax.lax.dynamic_update_slice_in_dim(
-                layer_cache["v"], v.astype(jnp.bfloat16), slot, axis=-2),
-        }
-    return out
+        updates = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+    if slot.ndim == 0:
+        return {name: jax.lax.dynamic_update_slice_in_dim(
+            layer_cache[name], u, slot, axis=-2)
+            for name, u in updates.items()}
+    per_row = jax.vmap(
+        lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(c, u, s,
+                                                            axis=-2))
+    return {name: per_row(layer_cache[name], u, slot)
+            for name, u in updates.items()}
 
 
 def _decode_block(cfg: LMConfig, p: Params, x, layer_cache, pos, *,
                   window=None, attn_fn=None):
     """One-token decode through one block. x [B,1,d].
 
-    ``attn_fn`` overrides the dense cache attention — the launch layer
-    injects ``dist.collectives.seq_sharded_decode_attn_fn`` here for
-    long-context (sequence-sharded KV) decode cells.
+    ``pos`` is a scalar or a [B] per-request position vector (see
+    ``lm_decode_step``). ``attn_fn`` overrides the dense cache attention —
+    the launch layer injects ``dist.collectives.seq_sharded_decode_attn_fn``
+    here for long-context (sequence-sharded KV) decode cells.
     """
     b = x.shape[0]
     dh = cfg.dh
@@ -322,11 +325,13 @@ def _decode_block(cfg: LMConfig, p: Params, x, layer_cache, pos, *,
     q = q.reshape(b, 1, cfg.n_heads, dh).transpose(0, 2, 1, 3)
     k = k.reshape(b, 1, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
     v = v.reshape(b, 1, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
-    posv = jnp.full((1,), pos, jnp.int32)
-    q = rope(q, posv[None, None, :], cfg.rope_theta)
-    k = rope(k, posv[None, None, :], cfg.rope_theta)
+    # [1] (scalar pos, broadcasts over B) or [B] (per-request positions);
+    # [..., None, None] aligns with q/k's [B, H, S=1] position axes
+    posv = jnp.atleast_1d(jnp.asarray(pos, jnp.int32))
+    q = rope(q, posv[:, None, None], cfg.rope_theta)
+    k = rope(k, posv[:, None, None], cfg.rope_theta)
     new_cache = _cache_insert(cfg, layer_cache, k, v, pos)
-    cache_len = jnp.full((b,), pos + 1, jnp.int32)
+    cache_len = jnp.broadcast_to(posv + 1, (b,))
     length = new_cache["k"].shape[-2]
     eff_len = jnp.minimum(cache_len, length)  # ring buffer truncation
     o = (attn_fn or decode_attention)(
@@ -355,8 +360,12 @@ def _decode_block(cfg: LMConfig, p: Params, x, layer_cache, pos, *,
 def lm_decode_step(cfg: LMConfig, params: Params, cache: Params,
                    tokens: jnp.ndarray, pos: jnp.ndarray, *,
                    attn_fn=None) -> tuple[jnp.ndarray, Params]:
-    """One greedy decode step. tokens [B,1] int32; pos scalar int32.
+    """One greedy decode step. tokens [B,1] int32; pos scalar OR [B] int32.
 
+    A scalar ``pos`` means every request sits at the same position (the
+    dry-run decode cells); a [B] vector gives each request its own position
+    — the slot-decode form the continuous batcher (``repro.serve``) runs,
+    where freshly admitted requests prefill while older slots generate.
     Returns (next_token [B,1], updated cache). ``attn_fn`` is threaded to
     every block's cache attention (see ``_decode_block``).
     """

@@ -1,0 +1,23 @@
+"""repro.serve — continuous-batching LM serving over fixed pow2 slots.
+
+The serve-side sibling of ``repro.engine``: where the preprocessing engine
+keeps the accelerator fed with subgraphs, this package keeps the decode
+step fed with requests. One jitted slot-decode step (per-slot positions,
+slot-gather prompt feed) admits, prefills, generates and retires
+variable-length requests with zero recompiles after warmup; the
+``AdmissionFeeder`` overlaps host-side tokenize/admit with the in-flight
+device step, and a mesh routes cache attention through the sharded decode
+collectives. See docs/SERVING.md for the slot lifecycle and
+``launch/serve.py`` for the CLI.
+"""
+from .engine import ServeEngine, ServeStats
+from .feeder import AdmissionFeeder, PreparedAdmission
+from .queue import RequestQueue
+from .request import Request, RequestState
+from .scheduler import NO_TOKEN, Scheduler
+
+__all__ = [
+    "AdmissionFeeder", "NO_TOKEN", "PreparedAdmission", "Request",
+    "RequestQueue", "RequestState", "Scheduler", "ServeEngine",
+    "ServeStats",
+]

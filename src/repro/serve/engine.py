@@ -1,0 +1,275 @@
+"""ServeEngine — continuous-batching greedy decode over fixed pow2 slots.
+
+The serving half of the ROADMAP north star: a request batcher over
+``models.transformer.lm_decode_step`` in which admission, prefill, decode
+and retirement all happen inside ONE jitted step function of fixed shapes.
+
+Design (mirrors ``engine.service``'s zero-recompile discipline):
+
+* **Fixed pow2 buckets.** Slot count, KV length and the prompt buffer are
+  bucketed once, at construction, with the same ``next_pow2`` bucketing the
+  preprocessing service applies to edge buffers — so admitting a request of
+  ANY length reuses the one compiled step program. A warm engine performs
+  zero recompiles regardless of traffic mix (guarded in
+  ``tests/test_serve.py``).
+* **Slot-gather unified prefill/decode.** Every step advances every active
+  slot by one token: slots still inside their prompt teacher-force the next
+  prompt token (a gather from the per-slot prompt buffer), slots past it
+  feed back their last generated token. ``lm_decode_step`` runs with a [S]
+  *per-slot position vector*, so freshly admitted requests prefill while
+  neighbours generate — continuous batching with no pipeline drain.
+* **Slot KV cache.** One ``make_cache`` buffer [L, S_slots, Hkv, S, dh];
+  per-slot positions mask attention to each request's own prefix, so slot
+  reuse needs no cache reset (stale entries sit beyond ``pos`` and are
+  never attended). With a mesh, the cache is placed with
+  ``dist.sharding.lm_cache_shardings`` and attention routes through
+  ``dist.collectives.sharded_decode_attention_seq`` (the same lowering the
+  ``decode_32k`` / ``long_500k`` dry-run cells compile).
+* **Overlapped host work.** The ``AdmissionFeeder`` thread prepares
+  admissions while the device decodes, and the run loop processes step
+  ``k-1``'s emitted tokens while step ``k`` is in flight (JAX async
+  dispatch) — ``engine.prefetch``'s double-buffer schedule on the serve
+  path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import next_pow2
+from repro.models.transformer import LMConfig, lm_decode_step, make_cache
+
+from .feeder import AdmissionFeeder
+from .queue import RequestQueue
+from .request import Request
+from .scheduler import NO_TOKEN, Scheduler
+
+
+@dataclasses.dataclass
+class ServeStats:
+    steps: int = 0
+    admitted: int = 0
+    retired: int = 0
+    tokens_processed: int = 0  # prefill + generated, active slots only
+    tokens_generated: int = 0
+
+
+def _build_step(cfg: LMConfig, prompt_cap: int, attn_fn):
+    """The one compiled program: slot-gather input select + batched decode
+    + slot state advance. Pure function of (params, state)."""
+
+    def step(params, state):
+        pos = state["pos"]
+        in_prompt = pos < state["prompt_len"]
+        idx = jnp.clip(pos, 0, prompt_cap - 1)
+        prompt_tok = jnp.take_along_axis(state["prompt"], idx[:, None],
+                                         axis=1)[:, 0]
+        inp = jnp.where(in_prompt, prompt_tok, state["last_tok"])
+        nxt, cache = lm_decode_step(cfg, params, state["cache"],
+                                    inp[:, None], pos, attn_fn=attn_fn)
+        tok = nxt[:, 0]
+        active = state["active"]
+        new_pos = jnp.where(active, pos + 1, pos)
+        # the model's output at prompt position P-1 is the first *generated*
+        # token; earlier outputs are teacher-forcing byproducts
+        emitting = active & (new_pos >= state["prompt_len"])
+        new_state = {
+            "cache": cache,
+            "pos": new_pos,
+            "prompt": state["prompt"],
+            "prompt_len": state["prompt_len"],
+            "last_tok": jnp.where(emitting, tok, state["last_tok"]),
+            "active": active,
+        }
+        emitted = jnp.where(emitting, tok, jnp.int32(NO_TOKEN))
+        return new_state, emitted
+
+    return step
+
+
+def _admit_update(state, slot, row, plen):
+    """Seat one prepared request in ``slot`` (device-side row writes only —
+    the cache needs no reset; see module docstring)."""
+    return {
+        "cache": state["cache"],
+        "pos": state["pos"].at[slot].set(0),
+        "prompt": state["prompt"].at[slot].set(row),
+        "prompt_len": state["prompt_len"].at[slot].set(plen),
+        "last_tok": state["last_tok"].at[slot].set(0),
+        "active": state["active"].at[slot].set(True),
+    }
+
+
+def _deactivate_update(state, slot):
+    return {**state, "active": state["active"].at[slot].set(False)}
+
+
+class ServeEngine:
+    """Continuous-batching decode engine over ``n_slots`` request slots.
+
+    ``submit()`` requests from any thread, ``close_submissions()`` to end
+    the stream, ``run()`` to drive the loop to completion. With ``mesh``,
+    the KV cache is sequence-sharded over the data-parallel axes and cache
+    attention LSE-combines across shards; without one, the identical step
+    runs on the local device.
+    """
+
+    def __init__(self, cfg: LMConfig, params, *, n_slots: int = 8,
+                 max_len: int = 128, prompt_cap: int | None = None,
+                 mesh=None, eos_id: int | None = None,
+                 feeder_depth: int = 2):
+        self.cfg = cfg
+        self.n_slots = next_pow2(n_slots)
+        self.max_len = next_pow2(max_len)
+        self.prompt_cap = next_pow2(prompt_cap or self.max_len // 2)
+        if self.prompt_cap > self.max_len:
+            raise ValueError("prompt_cap exceeds max_len")
+        self.mesh = mesh
+        self.eos_id = eos_id
+        self.queue = RequestQueue()
+        self.scheduler = Scheduler(self.n_slots, eos_id=eos_id)
+        self.stats = ServeStats()
+        self._feeder_depth = feeder_depth
+        self._rid = 0
+        self._rid_lock = threading.Lock()
+
+        attn_fn = None
+        if mesh is not None:
+            from repro.dist.collectives import seq_sharded_decode_attn_fn
+            attn_fn = seq_sharded_decode_attn_fn(mesh)
+        self.params = params
+        self.state = self._init_state()
+        self._step = jax.jit(_build_step(cfg, self.prompt_cap, attn_fn),
+                             donate_argnums=(1,))
+        self._admit_fn = jax.jit(_admit_update, donate_argnums=(0,))
+        self._deactivate_fn = jax.jit(_deactivate_update,
+                                      donate_argnums=(0,))
+
+    # ---------------------------------------------------------------- state
+    def _init_state(self):
+        cache = make_cache(self.cfg, batch=self.n_slots,
+                           max_len=self.max_len)
+        if self.mesh is not None:
+            from repro.dist.sharding import lm_cache_shardings, replicated
+            cache = jax.device_put(
+                cache, lm_cache_shardings(self.mesh, cache,
+                                          seq_sharded=True))
+            small = replicated(self.mesh, {"x": jnp.zeros(1)})["x"]
+            put = lambda x: jax.device_put(x, small)  # noqa: E731
+        else:
+            put = lambda x: x  # noqa: E731
+        s = self.n_slots
+        return {
+            "cache": cache,
+            "pos": put(jnp.zeros((s,), jnp.int32)),
+            "prompt": put(jnp.zeros((s, self.prompt_cap), jnp.int32)),
+            "prompt_len": put(jnp.zeros((s,), jnp.int32)),
+            "last_tok": put(jnp.zeros((s,), jnp.int32)),
+            "active": put(jnp.zeros((s,), bool)),
+        }
+
+    def step_cache_size(self) -> int:
+        """Compiled-program count behind the serve step (the zero-recompile
+        guard reads this; same ``_cache_size`` introspection as
+        ``engine.service.preprocess_cache_size``)."""
+        try:
+            return int(self._step._cache_size())
+        except AttributeError as e:
+            raise NotImplementedError(
+                "jax.jit cache introspection (_cache_size) is unavailable "
+                "on this JAX version") from e
+
+    # ------------------------------------------------------------ admission
+    def submit(self, prompt, max_new: int) -> Request:
+        """Enqueue one request (thread-safe); returns its Request handle."""
+        prompt = list(int(t) for t in prompt)
+        if not 1 <= len(prompt) <= self.prompt_cap:
+            raise ValueError(
+                f"prompt length {len(prompt)} not in [1, {self.prompt_cap}]")
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(
+                f"prompt+max_new {len(prompt) + max_new} exceeds KV bucket "
+                f"{self.max_len}")
+        with self._rid_lock:
+            rid = self._rid
+            self._rid += 1
+        req = Request(rid=rid, prompt=prompt, max_new=max_new)
+        self.queue.put(req)
+        return req
+
+    def close_submissions(self) -> None:
+        self.queue.close()
+
+    def reopen(self) -> None:
+        """Start a new request stream after ``run()`` returned.
+
+        ``close_submissions()`` is sticky on the queue, so callers that
+        warm up and then measure (benchmarks, tests) reuse one engine —
+        and its compiled programs — across streams through this method
+        instead of reaching into the queue attribute.
+        """
+        if not self.queue.closed:
+            raise RuntimeError("reopen() is only valid after the previous "
+                               "stream was closed")
+        self.queue = RequestQueue()
+
+    def _try_admit(self, feeder: AdmissionFeeder,
+                   timeout: float | None = None) -> int:
+        """Seat prepared requests while slots are free; ``timeout`` applies
+        to the first poll only (the idle loop's block-for-work knob)."""
+        n = 0
+        while self.scheduler.has_free_slot:
+            prep = feeder.poll(timeout=timeout if n == 0 else None)
+            if prep is None:
+                break
+            slot = self.scheduler.admit(prep)
+            self.state = self._admit_fn(self.state, jnp.int32(slot),
+                                        prep.row, jnp.int32(prep.plen))
+            self.stats.admitted += 1
+            n += 1
+        return n
+
+    def _process(self, emitted, completed: list[Request]) -> None:
+        for slot, req in self.scheduler.process(np.asarray(emitted)):
+            self.state = self._deactivate_fn(self.state, jnp.int32(slot))
+            self.stats.retired += 1
+            self.stats.tokens_generated += len(req.tokens_out)
+            completed.append(req)
+
+    # ------------------------------------------------------------- the loop
+    def run(self) -> list[Request]:
+        """Drive the engine until the request stream is closed and drained.
+
+        Returns completed requests in retirement order. The loop keeps one
+        step in flight: while the device runs step ``k``, the host routes
+        step ``k-1``'s tokens and the feeder prepares admissions.
+        """
+        completed: list[Request] = []
+        pending = None  # step k-1's emitted tokens (device array)
+        with AdmissionFeeder(self.queue, self.prompt_cap,
+                             depth=self._feeder_depth) as feeder:
+            while True:
+                self._try_admit(feeder)
+                if self.scheduler.n_active == 0:
+                    if pending is not None:
+                        self._process(pending, completed)
+                        pending = None
+                        continue  # processing may have freed cooling slots
+                    self.scheduler.flush_cooling()
+                    if feeder.done:
+                        break
+                    self._try_admit(feeder, timeout=0.05)
+                    continue
+                self.state, emitted = self._step(self.params, self.state)
+                self.stats.steps += 1
+                self.stats.tokens_processed += self.scheduler.n_active
+                if pending is not None:
+                    self._process(pending, completed)
+                pending = emitted
+            if pending is not None:
+                self._process(pending, completed)
+        return completed

@@ -1,0 +1,62 @@
+"""Request lifecycle containers for the continuous batcher.
+
+A ``Request`` is the unit the serve path admits, decodes and retires. Its
+life is: ``QUEUED`` (sitting in ``RequestQueue``) → ``PREPARED`` (the
+feeder tokenized/padded/device_put its prompt) → ``RUNNING`` (owns a slot;
+teacher-forced through its prompt, then generating) → ``FINISHED`` (hit
+``max_new`` tokens or the engine's ``eos_id``; slot released).
+
+Timestamps are recorded at every transition so the benchmark can report
+admission-latency percentiles (``admit_t - enqueue_t``) without any
+instrumentation of the engine loop itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREPARED = "prepared"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One serve request: a token prompt and a generation budget.
+
+    ``prompt`` is a host-side list of token ids (the "tokenized" form — this
+    repo has no text tokenizer, so callers pass ids directly). ``max_new``
+    bounds generation; the engine also stops at its ``eos_id`` if set.
+    ``tokens_out`` accumulates generated ids as the batcher emits them.
+    """
+
+    rid: int
+    prompt: list[int]
+    max_new: int
+    state: RequestState = RequestState.QUEUED
+    slot: int | None = None
+    tokens_out: list[int] = dataclasses.field(default_factory=list)
+    enqueue_t: float = dataclasses.field(default_factory=time.perf_counter)
+    admit_t: float | None = None
+    finish_t: float | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def admission_latency_s(self) -> float | None:
+        """Queue-to-slot latency (None until admitted)."""
+        if self.admit_t is None:
+            return None
+        return self.admit_t - self.enqueue_t
+
+    @property
+    def total_latency_s(self) -> float | None:
+        if self.finish_t is None:
+            return None
+        return self.finish_t - self.enqueue_t

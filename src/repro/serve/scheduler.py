@@ -1,0 +1,96 @@
+"""Slot scheduler — admission, token routing and retirement bookkeeping.
+
+The scheduler owns the *host mirror* of the device slot table: which
+request occupies which slot, how many tokens it has generated, and which
+slots are free. Slots are a fixed pow2 bucket (sized once at engine
+construction with the same ``next_pow2`` bucketing ``engine.service`` uses
+for preprocessing shapes), so admission never changes a traced shape and
+therefore never triggers a recompile.
+
+Retirement runs one step behind the device (the engine overlaps step ``k``
+with host processing of step ``k-1``), so a freed slot passes through a
+one-cycle ``cooling`` state before it can be re-admitted: the step that was
+already in flight when the slot retired may still emit one token for the
+old request, and re-admitting before that step is processed would
+mis-attribute the stale token to the new request.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .feeder import PreparedAdmission
+from .request import Request, RequestState
+
+NO_TOKEN = -1  # emitted-token sentinel for slots that generated nothing
+
+
+class Scheduler:
+    """FIFO admission into the lowest free slot; length/eos retirement."""
+
+    def __init__(self, n_slots: int, eos_id: int | None = None):
+        self.n_slots = n_slots
+        self.eos_id = eos_id
+        self._slots: list[Request | None] = [None] * n_slots
+        self._free: list[int] = list(range(n_slots))  # kept sorted
+        self._cooling: list[int] = []
+
+    # ------------------------------------------------------------ admission
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    @property
+    def has_free_slot(self) -> bool:
+        return bool(self._free)
+
+    def admit(self, prep: PreparedAdmission) -> int:
+        """Seat a prepared request in the lowest free slot; returns it."""
+        if not self._free:
+            raise RuntimeError("no free slot")
+        slot = self._free.pop(0)
+        req = prep.request
+        req.state = RequestState.RUNNING
+        req.slot = slot
+        req.admit_t = time.perf_counter()
+        self._slots[slot] = req
+        return slot
+
+    # ----------------------------------------------------------- retirement
+    def process(self, emitted: np.ndarray) -> list[tuple[int, Request]]:
+        """Route one step's emitted tokens; return newly finished slots.
+
+        ``emitted`` is the step's [n_slots] int32 output: a generated token
+        id, or ``NO_TOKEN`` for slots that are prefilling / inactive. Slots
+        in ``cooling`` re-enter the free list here — their potentially
+        stale in-flight step has now been consumed.
+        """
+        # slots retired last cycle have now had their stale in-flight step
+        # consumed (this very call) — safe to re-admit
+        self._free = sorted(self._free + self._cooling)
+        self._cooling = []
+        finished: list[tuple[int, Request]] = []
+        for slot, req in enumerate(self._slots):
+            if req is None or req.state is RequestState.FINISHED:
+                continue
+            tok = int(emitted[slot])
+            if tok == NO_TOKEN:
+                continue
+            if self.eos_id is not None and tok == self.eos_id:
+                finished.append((slot, req))
+                continue
+            req.tokens_out.append(tok)
+            if len(req.tokens_out) >= req.max_new:
+                finished.append((slot, req))
+        for slot, req in finished:
+            req.state = RequestState.FINISHED
+            req.finish_t = time.perf_counter()
+            self._slots[slot] = None
+            self._cooling.append(slot)
+        return finished
+
+    def flush_cooling(self) -> None:
+        """Free cooling slots when no step is in flight (engine idle)."""
+        self._free = sorted(self._free + self._cooling)
+        self._cooling = []

@@ -1,0 +1,92 @@
+"""Documentation link-check: every relative markdown link and every
+backticked repo path in README.md / ROADMAP.md / docs/*.md must resolve to
+a real file, so refactors that move modules fail the build instead of
+silently rotting the docs. Run directly by CI as its markdown link-check
+step (it needs no jax): ``pytest tests/test_docs.py``."""
+import os
+import re
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md", "ROADMAP.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir(os.path.join(ROOT, "docs"))
+    if f.endswith(".md"))
+
+# [text](target) — capture the target
+_MD_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `path/to/thing.py` — single backticked tokens that look like repo paths
+# (must contain a slash; bare names like `service.py` are ambiguous)
+_CODE_PATH_RE = re.compile(
+    r"`([\w.\-]+(?:/[\w.\-]+)+/?|repro(?:\.\w+)+)`")
+# paths are resolved against these bases (docs refer to modules both
+# repo-relative and src/repro-relative)
+_BASES = ("", "src", os.path.join("src", "repro"))
+
+
+def _exists(path: str, doc_dir: str) -> bool:
+    head, _, last = path.rstrip("/").rpartition("/")
+    candidates = [path]
+    if "." in last:  # `data/sampler.SampledDataset.iter_batches` and
+        # `launch/hlo_analysis.op_counts` style module.attr references
+        candidates.append(os.path.join(head, last.split(".")[0] + ".py"))
+    for base in (doc_dir, *_BASES):
+        for cand in candidates:
+            if os.path.exists(os.path.join(ROOT, base, cand)):
+                return True
+    return False
+
+
+def _check_doc(doc: str) -> list[str]:
+    doc_dir = os.path.dirname(doc)
+    with open(os.path.join(ROOT, doc)) as f:
+        text = f.read()
+    bad = []
+    for target in _MD_LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        if not _exists(target.split("#")[0], doc_dir):
+            bad.append(f"{doc}: broken link ({target})")
+    for ref in _CODE_PATH_RE.findall(text):
+        if ref.startswith("repro."):  # dotted module path
+            rel = os.path.join("src", *ref.split("."))
+            if not (os.path.isdir(os.path.join(ROOT, rel))
+                    or os.path.exists(os.path.join(ROOT, rel + ".py"))):
+                bad.append(f"{doc}: dangling module reference ({ref})")
+        elif not _exists(ref, doc_dir):
+            bad.append(f"{doc}: dangling path reference ({ref})")
+    return bad
+
+
+def test_doc_inventory_present():
+    """The documentation system's required pages exist."""
+    for doc in ("docs/ARCHITECTURE.md", "docs/SERVING.md", "README.md",
+                "ROADMAP.md"):
+        assert os.path.exists(os.path.join(ROOT, doc)), doc
+
+
+@pytest.mark.parametrize("doc", DOC_FILES)
+def test_markdown_references_resolve(doc):
+    problems = _check_doc(doc)
+    assert not problems, "\n".join(problems)
+
+
+def test_architecture_module_map_names_real_files():
+    """Acceptance: every paper concept row in the module map resolves —
+    the table cells are backticked paths, so the generic checker covers
+    them; this asserts the specific concept→module pairs exist."""
+    must_exist = [
+        "src/repro/kernels/radix_sort.py",   # UPE
+        "src/repro/core/set_partition.py",   # UPE router
+        "src/repro/core/set_count.py",       # SCR
+        "src/repro/core/reindexing.py",      # Reindexing
+        "src/repro/core/costmodel.py",       # Table-I cost model
+        "src/repro/engine/service.py",       # reconfiguration
+        "src/repro/serve/engine.py",         # serving
+    ]
+    text = open(os.path.join(ROOT, "docs/ARCHITECTURE.md")).read()
+    for path in must_exist:
+        assert os.path.exists(os.path.join(ROOT, path)), path
+        assert path.removeprefix("src/repro/") in text \
+            or path in text, f"ARCHITECTURE.md no longer references {path}"

@@ -105,6 +105,68 @@ def test_packed_convert_runs_one_global_sort():
     assert len(packed.splitlines()) < len(two.splitlines())
 
 
+def _bytes_accessed(jitted, *args) -> float:
+    ca = jitted.lower(*args).compile().cost_analysis()
+    if isinstance(ca, list):  # pre-0.5 jax returns one dict per partition
+        ca = ca[0]
+    return float(ca["bytes accessed"])
+
+
+def test_packed_ordering_keys_only_moves_fewer_bytes():
+    """The packed key IS the data — the keys-only Ordering (default) must
+    route no edge-id payload through the chunk sorts and merge rounds.
+
+    Two guards. (1) Compiled packed-mode convert accesses strictly fewer
+    bytes than two-pass (one keys-only global sort vs two payload-carrying
+    ones). (2) The keys-only *traced program* is strictly smaller than the
+    payload-carrying A/B variant (``keys_only=False``): jaxpr-level DCE
+    already strips the dead payload before XLA:CPU ever sees it, so
+    compiled bytes can't separate the two — but the opaque Mosaic kernels
+    (``radix_sort_chunks`` / ``fused_merge_rounds``) execute whatever they
+    were handed, so the payload stream must be gone at trace level, not
+    merely dead."""
+    from functools import partial
+
+    from repro.core import COO, EngineConfig, convert, random_coo
+    from repro.core.ordering import edge_ordering
+    rng = np.random.default_rng(0)
+    dst, src = random_coo(rng, 200, 1500)
+    coo = COO.from_arrays(dst, src, 200, capacity=2048)
+
+    packed = _bytes_accessed(jax.jit(partial(
+        convert, cfg=EngineConfig(w_upe=256, sort_mode="packed"))), coo)
+    two_pass = _bytes_accessed(jax.jit(partial(
+        convert, cfg=EngineConfig(w_upe=256, sort_mode="two_pass"))), coo)
+    assert packed < two_pass, (packed, two_pass)
+
+    def traced_size(keys_only):
+        return len(str(jax.make_jaxpr(partial(
+            edge_ordering, chunk=256, mode="packed",
+            keys_only=keys_only))(coo)))
+
+    assert traced_size(True) < traced_size(False)
+
+
+def test_keys_only_sort_matches_payload_sort_keys():
+    """The keys-only stack (jnp and Pallas chunk sorters, fused merge)
+    returns exactly the key stream of the payload-carrying sort."""
+    from repro.core.ordering import stable_sort_by_key
+    from repro.kernels.ops import make_pallas_chunk_sort_fn, pallas_merge_fn
+    rng = np.random.default_rng(1)
+    keys = jnp.array(rng.integers(0, 500, 1024), jnp.int32)
+    vals = jnp.arange(1024, dtype=jnp.int32)
+    want, _ = stable_sort_by_key(keys, vals, 500, chunk=128)
+    got, none = stable_sort_by_key(keys, None, 500, chunk=128)
+    assert none is None
+    np.testing.assert_array_equal(got, want)
+    got_p, none_p = stable_sort_by_key(
+        keys, None, 500, chunk=128,
+        chunk_sort_fn=make_pallas_chunk_sort_fn(4),
+        merge_fn=pallas_merge_fn)
+    assert none_p is None
+    np.testing.assert_array_equal(got_p, want)
+
+
 # ------------------------------------------------- sorted-stream reshaping
 def test_pointer_array_sorted_method_equals_scr_method():
     from repro.core.reshaping import build_pointer_array
