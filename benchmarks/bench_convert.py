@@ -1,12 +1,35 @@
-"""Convert/sort microbench — packed-key vs two-pass vs XLA baseline.
+"""Convert/sort microbench — strategy-dispatched engine vs XLA baseline.
 
 Seeds the BENCH trajectory: emits ``BENCH_convert.json`` (repo root) with
-median wall-clock per call for the three graph-conversion paths at a
-subgraph-conversion scale (the shape ``sample_subgraph`` re-converts every
-step — the packed-key fast path) and at a larger graph scale, plus the
-packed-over-two-pass speedup the Ordering rewrite buys. CPU-host proxy
-numbers: absolute times are not TPU times, but the pass-count contrast
-(one global sort vs two) is schedule-level and survives the port.
+median wall-clock per call for the graph-conversion paths at three scales —
+the shape ``sample_subgraph`` re-converts every step (16k), a mid graph
+(131k) and a large graph (1M edges) — comparing the three ``sort_strategy``
+values, the Table-I auto dispatch, the two-pass key scheme and the XLA
+comparison-sort baseline, plus a per-phase (sort / pointer / reindex)
+breakdown of the dispatched path. The headline series is
+``speedup_packed_vs_xla``: the auto-dispatched engine path over the XLA
+lexsort baseline, which the chunked-merge ladder used to LOSE at scale
+(0.71× at 131k in PR 3). The dispatch wins it back twice over: the
+global-radix strategy halves the radix path (zero merge rounds), and on
+CPU hosts the calibrated model hands large graphs to the native-sort
+strategy (packed keys-only, rank-searched pointers) — each strategy a
+different winner per platform, which is the §V reconfiguration story.
+CPU-host proxy numbers: absolute times are not TPU times, but the
+pass-structure contrast (zero merge rounds vs log_k ladder vs comparison
+sort) is schedule-level and survives the port.
+
+Trajectory note (PR 5): ``packed_us`` and ``speedup_packed_vs_two_pass``
+up to the PR-3/PR-4 records measured the pinned ``sort_mode="packed"``
+chunked path; from PR 5 they alias the auto-DISPATCHED engine path
+(``auto_us`` is the canonical name — at 1M edges the dispatch isn't even
+the packed key scheme, the VID space forces two-pass). Compare across
+PRs on ``auto_us``/strategy columns, not on the legacy names.
+
+``run(smoke=True)`` (CI: ``python -m benchmarks.run convert --smoke``)
+shrinks the cases and asserts STRUCTURE instead of wall-clock: bit-equal
+CSC outputs across every strategy, one compiled program per jitted path,
+and the cost model dispatching global_radix exactly where the merge
+ladder is non-empty.
 """
 from __future__ import annotations
 
@@ -16,20 +39,37 @@ import os
 from functools import partial
 
 import jax
+import numpy as np
 
-from repro.core import EngineConfig, convert, convert_xla
+from repro.core import (EngineConfig, Workload, convert, convert_xla,
+                        merge_round_count, resolve_sort_strategy)
+from repro.core.costmodel import digit_pass_count
+from repro.core.ordering import edge_ordering
+from repro.core.reindexing import build_reindex_map, reindex_edges
+from repro.core.reshaping import build_pointer_array
 
 from .common import emit, make_graph, time_fn
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_convert.json")
+# smoke runs must not clobber the committed BENCH trajectory (CI uploads
+# BENCH_*.json artifacts either way)
+SMOKE_OUT_PATH = OUT_PATH.replace(".json", "_smoke.json")
 
 # (label, n_edges, w_upe): subgraph-conversion scale (what sample_subgraph
-# re-converts per training step) and a graph-conversion scale. w_upe=1024
-# puts the merge tree (where packed halves the rounds) at realistic depth.
+# re-converts per training step), graph-conversion scale, and the 1M-edge
+# scale where the PR-3 chunked ladder lost to XLA. w_upe=1024 puts the
+# merge ladder (where global_radix wins its rounds back) at realistic
+# depth; 1M keeps the same chunk so the ladder is 10 rounds deep.
 CASES = [
-    ("subgraph_16k", 16384, 1024),
-    ("graph_131k", 131072, 1024),
+    ("subgraph_16k", 16384, 1024, 7),
+    ("graph_131k", 131072, 1024, 7),
+    ("graph_1m", 1 << 20, 1024, 5),
+]
+
+SMOKE_CASES = [
+    ("smoke_4k", 4096, 256, 2),
+    ("smoke_16k", 16384, 256, 2),
 ]
 
 
@@ -37,37 +77,132 @@ def _jit_convert(cfg: EngineConfig):
     return jax.jit(partial(convert, cfg=cfg))
 
 
-def run() -> dict:
+def _phase_times(coo, cfg: EngineConfig, strategy: str, iters: int) -> dict:
+    """Per-phase breakdown of the dispatched path: sort (Ordering),
+    pointer (Reshaping), reindex (the Reindexing primitive at batch
+    scale — it runs per sampled subgraph, not per graph)."""
+    sort_fn = jax.jit(partial(
+        edge_ordering, chunk=min(cfg.w_upe, coo.capacity),
+        radix_bits=cfg.radix_bits, map_batch=cfg.n_upe,
+        mode=cfg.sort_mode, strategy=strategy, fan_in=cfg.merge_fan_in))
+    t_sort = time_fn(sort_fn, coo, iters=iters, warmup=2)
+    sorted_coo = jax.block_until_ready(sort_fn(coo))
+    ptr_fn = jax.jit(partial(build_pointer_array, n_nodes=coo.n_nodes))
+    t_ptr = time_fn(ptr_fn, sorted_coo.dst, iters=iters, warmup=2)
+    rng = np.random.default_rng(0)
+    vids = jax.numpy.asarray(
+        rng.integers(0, coo.n_nodes, 8192).astype(np.int32))
+    e_dst = jax.numpy.asarray(
+        rng.integers(0, coo.n_nodes, 8192).astype(np.int32))
+    e_src = jax.numpy.asarray(
+        rng.integers(0, coo.n_nodes, 8192).astype(np.int32))
+
+    @jax.jit
+    def reindex_fn(vids, e_dst, e_src):
+        rmap = build_reindex_map(vids)
+        return reindex_edges(rmap, e_dst, e_src,
+                             n_nodes_cap=vids.shape[0])
+
+    t_reidx = time_fn(reindex_fn, vids, e_dst, e_src, iters=iters, warmup=2)
+    return {"sort_us": t_sort, "pointer_us": t_ptr, "reindex_us": t_reidx}
+
+
+def run(smoke: bool = False) -> dict:
     results: dict = {"cases": {}}
-    for label, n_edges, w_upe in CASES:
+    for label, n_edges, w_upe, iters in (SMOKE_CASES if smoke else CASES):
         coo = make_graph(n_edges)
         base = EngineConfig(w_upe=w_upe, n_upe=8)
-        rows = {}
-        for mode in ("packed", "two_pass"):
-            cfg = dataclasses.replace(base, sort_mode=mode)
-            rows[mode] = time_fn(_jit_convert(cfg), coo, iters=7, warmup=2)
-            emit(f"convert/{label}/{mode}", rows[mode], f"e={n_edges}")
-        rows["xla"] = time_fn(jax.jit(convert_xla), coo, iters=7, warmup=2)
+        w = Workload(n=coo.n_nodes, e=coo.capacity)
+        strategy_auto = resolve_sort_strategy(base, w)
+        rows: dict = {}
+        jits: dict = {}
+        # the three reduction structures, pinned, + the Table-I dispatch
+        for strat in ("chunked_merge", "global_radix", "xla_sort", "auto"):
+            cfg = dataclasses.replace(base, sort_strategy=strat)
+            jits[strat] = _jit_convert(cfg)
+            rows[strat] = time_fn(jits[strat], coo, iters=iters, warmup=2)
+            emit(f"convert/{label}/{strat}", rows[strat], f"e={n_edges}")
+        # key-scheme A/B (the packed row IS the engine path when the VID
+        # space fits; at 1M the auto mode falls back to two-pass LSD)
+        cfg_two = dataclasses.replace(base, sort_mode="two_pass")
+        rows["two_pass"] = time_fn(_jit_convert(cfg_two), coo, iters=iters,
+                                   warmup=2)
+        emit(f"convert/{label}/two_pass", rows["two_pass"], f"e={n_edges}")
+        rows["xla"] = time_fn(jax.jit(convert_xla), coo, iters=iters,
+                              warmup=2)
         emit(f"convert/{label}/xla", rows["xla"], f"e={n_edges}")
-        speedup = rows["two_pass"] / rows["packed"]
-        emit(f"convert/{label}/speedup_packed_vs_two_pass", speedup,
-             f"e={n_edges}")
+        speedup_two = rows["two_pass"] / rows["auto"]
+        speedup_xla = rows["xla"] / rows["auto"]
+        emit(f"convert/{label}/speedup_packed_vs_xla", speedup_xla,
+             f"auto={strategy_auto}")
+        phases = _phase_times(coo, base, strategy_auto, iters)
         results["cases"][label] = {
             "n_edges": n_edges,
             "n_nodes": int(coo.n_nodes),
             "w_upe": w_upe,
-            "packed_us": rows["packed"],
+            "strategy_auto": strategy_auto,
+            "merge_rounds_chunked": merge_round_count(base, w,
+                                                      "chunked_merge"),
+            "digit_passes": digit_pass_count(base, w),
+            "chunked_merge_us": rows["chunked_merge"],
+            "global_radix_us": rows["global_radix"],
+            "xla_sort_us": rows["xla_sort"],
+            "auto_us": rows["auto"],
+            "packed_us": rows["auto"],  # trajectory alias — see docstring
             "two_pass_us": rows["two_pass"],
             "xla_us": rows["xla"],
-            "speedup_packed_vs_two_pass": speedup,
+            "speedup_packed_vs_two_pass": speedup_two,
+            "speedup_packed_vs_xla": speedup_xla,
+            "phases": phases,
         }
-    with open(OUT_PATH, "w") as f:
+        if smoke:
+            _assert_structure(coo, base, jits, results["cases"][label])
+    with open(SMOKE_OUT_PATH if smoke else OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
         f.write("\n")
     return results
 
 
+def _assert_structure(coo, base: EngineConfig, jits: dict, row: dict) -> None:
+    """CI smoke gates — structure, not wall-clock (CPU runners jitter).
+
+    1. bit-identical CSC across every sort_strategy and vs the XLA sort;
+    2. exactly one compiled program per jitted strategy path (the timing
+       loop must not have re-traced);
+    3. the model's zero-merge-round claim holds for global_radix, the
+       auto dispatch TRACED the exact program of the strategy the model
+       priced (jaxpr equality against the pinned-strategy convert — this
+       is where a divergence between ``convert``'s internal resolution
+       and the benchmark's would surface), and global_radix outranks
+       chunked_merge wherever the benchmark measured it winning (every
+       case with a ladder ≥ 3 rounds deep).
+    """
+    from repro.core.costmodel import Calibration, _ordering_seconds
+    ref = jax.block_until_ready(convert_xla(coo))
+    for strat, fn in jits.items():
+        got = jax.block_until_ready(fn(coo))
+        assert np.array_equal(np.asarray(got.ptr), np.asarray(ref.ptr)), strat
+        e = int(coo.n_edges)
+        assert np.array_equal(np.asarray(got.idx)[:e],
+                              np.asarray(ref.idx)[:e]), strat
+        assert fn._cache_size() == 1, (strat, fn._cache_size())
+    w = Workload(n=coo.n_nodes, e=coo.capacity)
+    assert merge_round_count(base, w, "global_radix") == 0
+    auto_cfg = dataclasses.replace(base, sort_strategy="auto")
+    pinned_cfg = dataclasses.replace(base, sort_strategy=row["strategy_auto"])
+    jaxpr_auto = str(jax.make_jaxpr(partial(convert, cfg=auto_cfg))(coo))
+    jaxpr_pinned = str(jax.make_jaxpr(partial(convert, cfg=pinned_cfg))(coo))
+    assert jaxpr_auto == jaxpr_pinned, \
+        f"auto dispatch traced a different program than {pinned_cfg.key}"
+    if row["merge_rounds_chunked"] >= 3:
+        cal = Calibration()
+        assert (_ordering_seconds(base, w, cal, "global_radix")
+                < _ordering_seconds(base, w, cal, "chunked_merge")), row
+    emit(f"convert/{row['n_edges']}/structure", 0.0, "asserts=passed")
+
+
 if __name__ == "__main__":
+    import sys
     jax.config.update("jax_platform_name", "cpu")
     print("name,us_per_call,derived")
-    run()
+    run(smoke="--smoke" in sys.argv)

@@ -1,10 +1,15 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows. Pass module names to run a
-subset: ``python -m benchmarks.run fig6 fig18``.
+subset: ``python -m benchmarks.run fig6 fig18``. ``--smoke`` shrinks any
+suite whose ``run`` accepts a ``smoke`` flag to CI-sized cases with
+structural asserts instead of wall-clock gates (the bench-smoke CI job
+runs ``python -m benchmarks.run convert --smoke``); in smoke mode a
+suite failure exits non-zero so CI catches broken structure.
 """
 from __future__ import annotations
 
+import inspect
 import sys
 
 
@@ -29,13 +34,21 @@ def main() -> None:
         "engine": fig_engine_overlap.run,
         "roofline": roofline.run,
     }
+    smoke = "--smoke" in sys.argv[1:]
     wanted = [a for a in sys.argv[1:] if a in suites] or list(suites)
     print("name,us_per_call,derived")
+    failed = False
     for name in wanted:
+        fn = suites[name]
+        kwargs = ({"smoke": True} if smoke
+                  and "smoke" in inspect.signature(fn).parameters else {})
         try:
-            suites[name]()
+            fn(**kwargs)
         except Exception as e:  # noqa: BLE001 — a suite failing is a result
+            failed = True
             print(f"{name}/SUITE_ERROR,0,{type(e).__name__}:{e}")
+    if smoke and failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

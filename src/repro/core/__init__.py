@@ -16,11 +16,14 @@ from .graph import COO, CSC, SENTINEL, Subgraph, next_pow2, pad_to, random_coo
 from .set_partition import (displacement, gather_sources_from_counts,
                             partition_indices, radix_partition,
                             radix_sort_by_key, radix_sort_keys,
-                            set_partition)
+                            rank_gather_sources, set_partition,
+                            tiled_digit_sources)
 from .set_count import (count_equal, count_less_than, filter_lookup,
                         searchsorted_oracle)
-from .ordering import (edge_ordering, edge_ordering_xla, merge_sorted,
-                       stable_sort_by_key, supports_packed_keys)
+from .ordering import (DEFAULT_CHUNK, edge_ordering, edge_ordering_xla,
+                       global_radix_sort_by_key, merge_round_fan_ins,
+                       merge_sorted, merge_sorted_k, stable_sort_by_key,
+                       supports_packed_keys, xla_stable_sort_by_key)
 from .reshaping import (build_pointer_array, build_pointer_array_serial,
                         data_reshaping, graph_convert)
 from .sampling import sample_khop, select_floyd, select_keysort, \
@@ -29,7 +32,9 @@ from .reindexing import ReindexMap, build_reindex_map, reindex_edges
 from .pipeline import (convert, convert_xla, gather_features, preprocess,
                        preprocess_xla_baseline, sample_subgraph)
 from .costmodel import (Calibration, EngineConfig, Workload, best_config,
-                        bitstream_library, estimate_seconds)
+                        bitstream_library, choose_config, estimate_seconds,
+                        merge_round_count, relocation_bytes,
+                        resolve_sort_strategy)
 from .reconfig import DynPre, Engine, autopre, statpre
 
 __all__ = [k for k in dir() if not k.startswith("_")]

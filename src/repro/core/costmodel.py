@@ -26,14 +26,19 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from .ordering import _bits_for, supports_packed_keys
+from .ordering import (DEFAULT_CHUNK, _bits_for, merge_round_fan_ins,
+                       supports_packed_keys)
+from .graph import next_pow2
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """The reconfigurable knobs — the bitstream parameter analog.
 
-    w_upe: radix-sort chunk width (elements sorted fully in VMEM)
+    w_upe: radix-sort chunk width (elements sorted fully in VMEM); the
+        default is ``ordering.DEFAULT_CHUNK`` — the ONE routed chunk
+        constant, so direct ``stable_sort_by_key`` callers and the engine
+        path share a ladder depth
     n_upe: parallel sort lanes (chunks processed concurrently)
     w_scr: set-count element-block width (COO elements compared per pass)
     n_scr: set-count target-block height (pointer entries produced per pass)
@@ -44,9 +49,20 @@ class EngineConfig:
     sort_mode: edge-Ordering key scheme — "auto" (packed single-pass sort
         when 2·bits(n_nodes) ≤ 31, two-pass LSD otherwise), "packed", or
         "two_pass"
+    sort_strategy: reduction structure of every global sort — "auto"
+        (Table-I scored per workload, see ``resolve_sort_strategy``),
+        "chunked_merge" (chunk radix sort + k-ary merge ladder),
+        "global_radix" (per-digit tiled histogram + rank-gather relocation
+        over the whole edge array; zero merge rounds), or "xla_sort" (the
+        platform's native comparison-sort unit)
+    merge_fan_in: runs merged per ladder rung on the chunked_merge path —
+        round count drops from log₂(e/w_upe) to log_k at k²-per-rung
+        search cost (an HBM-rounds-for-compute trade: the default stays 2
+        on compute-bound hosts; raise it where relocation traffic
+        dominates — the model prices both sides)
     """
 
-    w_upe: int = 4096
+    w_upe: int = DEFAULT_CHUNK
     n_upe: int = 8
     w_scr: int = 2048
     n_scr: int = 256
@@ -54,12 +70,17 @@ class EngineConfig:
     use_pallas: bool = False
     radix_bits: int = 4
     sort_mode: str = "auto"
+    sort_strategy: str = "auto"
+    merge_fan_in: int = 2
 
     @property
     def key(self) -> str:
         mode = "" if self.sort_mode == "auto" else f"_{self.sort_mode}"
+        strat = ("" if self.sort_strategy == "auto"
+                 else f"_{self.sort_strategy}")
+        fan = "" if self.merge_fan_in == 2 else f"_k{self.merge_fan_in}"
         return (f"u{self.n_upe}x{self.w_upe}_s{self.n_scr}x{self.w_scr}"
-                f"_{self.selection}_r{self.radix_bits}{mode}"
+                f"_{self.selection}_r{self.radix_bits}{mode}{strat}{fan}"
                 f"{'_pl' if self.use_pallas else ''}")
 
 
@@ -100,12 +121,39 @@ def bitstream_library() -> list[EngineConfig]:
 
 @dataclasses.dataclass
 class Calibration:
-    """Per-primitive throughput (elements/sec per unit engine)."""
+    """Per-primitive throughput (elements/sec per unit engine).
 
-    upe_elems_per_s: float = 2.0e8  # per lane, per merge round
+    Defaults are CPU-host-measured (BENCH_convert.json trajectory); the
+    strategy crossovers they produce match the benchmark — global_radix
+    above chunked_merge wherever the ladder has rounds, the native sort
+    above both at every CPU scale. A TPU deployment recalibrates
+    (benchmarks/fig24_costmodel.py): there ``hbm_bytes_per_s`` rises by
+    ~3 orders (the relocation gathers stream through VMEM-resident
+    Pallas tiles) while ``xla_cmp_per_s`` collapses (XLA sorts replicate
+    under GSPMD and have no Mosaic fast path), flipping the dispatch to
+    the radix strategies.
+    """
+
+    upe_elems_per_s: float = 2.0e8  # per lane, per digit/merge pass
     scr_cmps_per_s: float = 5.0e9  # comparisons/sec (tile compare-reduce)
     sel_nodes_per_s: float = 5.0e6  # Floyd draws/sec per lane
     reidx_elems_per_s: float = 1.0e8
+    # relocation-traffic throughput: bytes/sec the global relocation
+    # gathers sustain (random access — on CPU this is cache-miss-bound,
+    # ~100 MB/s effective, the term that makes a 10-pass radix lose to
+    # the native sort at 1M edges)
+    hbm_bytes_per_s: float = 1.0e8
+    # per-element cost of one merge-rung rank-search step relative to one
+    # digit-pass element op; a rung of fan-in k performs k² searches at
+    # log₂(e) depth (k(k-1) cross-run + k slot ranks)
+    merge_step_weight: float = 1.0
+    # native comparison-sort unit (the xla_sort strategy): sustained
+    # compare-exchange throughput of one e·log₂(e) keys-only sort
+    # (payload-carrying pair sorts square the stream factor), plus the
+    # fixed per-sort dispatch overhead that hands small arrays to the
+    # radix strategies.
+    xla_cmp_per_s: float = 3.5e8
+    sort_dispatch_s: float = 2.0e-4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +193,95 @@ def digit_pass_count(cfg: EngineConfig, w: Workload) -> int:
     return sort_pass_count(cfg, w) * max(1, -(-key_bits // cfg.radix_bits))
 
 
+def _merge_fan_ins(cfg: EngineConfig, w: Workload) -> list[int]:
+    """Per-rung fan-ins of the chunked_merge ladder this workload runs
+    (computed on the pow2 capacity bucket the engine actually dispatches)."""
+    e = next_pow2(w.e)
+    return merge_round_fan_ins(e, min(cfg.w_upe, e), cfg.merge_fan_in)
+
+
+def merge_round_count(cfg: EngineConfig, w: Workload,
+                      strategy: str | None = None) -> int:
+    """Full-array merge rounds per edge Ordering (Table-I amendment #2).
+
+    0 for the global_radix strategy (its digit passes relocate the whole
+    array directly — no ladder); ``sort_pass_count ·
+    len(merge_round_fan_ins(...))`` for chunked_merge, i.e. log_k instead
+    of log₂ once ``merge_fan_in`` > 2. The HLO guard in
+    tests/test_perf_paths.py checks the compiled ladder against this exact
+    count. ``strategy=None`` prices the cfg's resolved strategy.
+    """
+    strategy = strategy or resolve_sort_strategy(cfg, w)
+    if strategy in ("global_radix", "xla_sort"):
+        return 0
+    return sort_pass_count(cfg, w) * len(_merge_fan_ins(cfg, w))
+
+
+def relocation_bytes(cfg: EngineConfig, w: Workload,
+                     strategy: str | None = None) -> float:
+    """HBM bytes the Ordering's full-array relocations stream (Table-I
+    amendment #3) — the term that separates the strategies.
+
+    chunked_merge keeps each digit pass VMEM-resident (the chunk is the
+    working set), so it streams the array once for the whole chunk-sort
+    stage plus once per merge rung; global_radix streams it once per digit
+    pass. Keys-only packed Ordering moves one int32 stream, the two-pass
+    scheme two (key + payload); every pass reads and writes.
+    """
+    strategy = strategy or resolve_sort_strategy(cfg, w)
+    streams = 1 if sort_pass_count(cfg, w) == 1 else 2
+    bytes_per_elem = 4 * streams * 2  # int32, read + write
+    if strategy == "xla_sort":
+        return 0.0  # relocation is internal to the native sort's compares
+    if strategy == "global_radix":
+        return float(digit_pass_count(cfg, w) * w.e * bytes_per_elem)
+    passes = sort_pass_count(cfg, w)
+    rounds = passes * len(_merge_fan_ins(cfg, w))
+    return float((passes + rounds) * w.e * bytes_per_elem)
+
+
+SORT_STRATEGIES = ("chunked_merge", "global_radix", "xla_sort")
+
+
+def _ordering_seconds(cfg: EngineConfig, w: Workload, cal: "Calibration",
+                      strategy: str) -> float:
+    """Ordering latency under one concrete strategy: digit-pass compute +
+    (chunked only) per-rung rank-search compute + relocation traffic; the
+    native-sort strategy is a pure e·log₂(e) compare-exchange term plus a
+    fixed dispatch overhead (its relocation is internal to the sort)."""
+    passes = sort_pass_count(cfg, w)
+    if strategy == "xla_sort":
+        streams = 1 if passes == 1 else 2
+        cmps = passes * streams**2 * w.e * math.log2(max(2.0, w.e))
+        return passes * cal.sort_dispatch_s + cmps / cal.xla_cmp_per_s
+    lanes = max(1, cfg.n_upe)  # n_upe=0 = "all lanes at once" (full vmap)
+    digits = digit_pass_count(cfg, w)
+    t = digits * w.e / (cal.upe_elems_per_s * lanes)
+    if strategy == "chunked_merge":
+        depth = math.log2(max(2.0, w.e))  # rank-search rounds per rung
+        steps = passes * sum(k * k for k in _merge_fan_ins(cfg, w)) * depth
+        t += (cal.merge_step_weight * steps * w.e
+              / (cal.upe_elems_per_s * lanes))
+    return t + relocation_bytes(cfg, w, strategy) / cal.hbm_bytes_per_s
+
+
+def resolve_sort_strategy(cfg: EngineConfig, w: Workload,
+                          cal: "Calibration | None" = None) -> str:
+    """Resolve ``sort_strategy="auto"`` — the Table-I scored dispatch.
+
+    The SAME predicate ``pipeline.convert`` / ``sample_subgraph`` and the
+    benchmark harness use, so the model's pick is the program that runs:
+    global_radix exactly where its pass-linear cost undercuts the chunk
+    sort + merge ladder (large e/w_upe ratios; at e ≤ w_upe the two
+    coincide and the chunked path wins on relocation traffic).
+    """
+    if cfg.sort_strategy != "auto":
+        return cfg.sort_strategy
+    cal = cal or Calibration()
+    return min(SORT_STRATEGIES,
+               key=lambda s: _ordering_seconds(cfg, w, cal, s))
+
+
 def ordering_cycles(cfg: EngineConfig, w: Workload) -> float:
     m = max(1.0, math.log2(max(2.0, w.e / cfg.w_upe)) - 1)
     return sort_pass_count(cfg, w) * m * w.e / (cfg.n_upe * cfg.w_upe)
@@ -161,15 +298,19 @@ def reshaping_cycles(cfg: EngineConfig, w: Workload) -> float:
 
 def estimate_seconds(cfg: EngineConfig, w: Workload,
                      cal: Calibration | None = None) -> dict[str, float]:
-    """Cycle model → seconds via calibrated throughputs."""
+    """Cycle model → seconds via calibrated throughputs.
+
+    Ordering is priced per strategy (digit-pass compute + merge-rung
+    rank-search compute + relocation traffic — see ``_ordering_seconds``);
+    ``sort_strategy="auto"`` scores as the min of both, which is what the
+    dispatcher will run.
+    """
     cal = cal or Calibration()
-    m = max(1.0, math.log2(max(2.0, w.e / cfg.w_upe)) - 1)
-    # Table-I amendment: merge rounds scale with the global-sort pass count
-    # (1 packed / 2 LSD) and the chunk stage with the configured digit width.
-    passes = sort_pass_count(cfg, w)
-    digits = digit_pass_count(cfg, w)
-    t_order = ((passes * m + digits) * w.e) / (cal.upe_elems_per_s
-                                               * cfg.n_upe)
+    if cfg.sort_strategy == "auto":
+        t_order = min(_ordering_seconds(cfg, w, cal, s)
+                      for s in SORT_STRATEGIES)
+    else:
+        t_order = _ordering_seconds(cfg, w, cal, cfg.sort_strategy)
     s = w.b * (w.k ** (w.l + 1)) - 1
     t_select = s / (cal.sel_nodes_per_s * cfg.n_upe)
     t_reshape = max(w.n / cfg.n_scr, w.e / cfg.w_scr) * (
@@ -189,3 +330,16 @@ def best_config(w: Workload, library: list[EngineConfig] | None = None,
     """DynPre's decision: score every pre-compiled config, pick the min."""
     lib = library or bitstream_library()
     return min(lib, key=lambda c: estimate_seconds(c, w, cal)["total"])
+
+
+def choose_config(w: Workload, library: list[EngineConfig] | None = None,
+                  cal: Calibration | None = None) -> EngineConfig:
+    """``best_config`` with the strategy axis resolved: score the library
+    (auto entries score as their best strategy), then pin the winning
+    ``sort_strategy`` on the returned config so the dispatched program is
+    exactly the one the model priced — the engine-service entry point.
+    """
+    cal = cal or Calibration()
+    best = best_config(w, library, cal)
+    return dataclasses.replace(
+        best, sort_strategy=resolve_sort_strategy(best, w, cal))

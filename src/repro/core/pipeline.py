@@ -20,21 +20,25 @@ from .ordering import edge_ordering, edge_ordering_xla
 from .reshaping import data_reshaping, build_pointer_array
 from .sampling import sample_khop
 from .reindexing import build_reindex_map, reindex_edges
-from .costmodel import EngineConfig
+from .costmodel import EngineConfig, Workload, resolve_sort_strategy
 
 
 def kernel_fns(cfg: EngineConfig):
-    """(chunk_sort_fn, count_fn, merge_fn) for ``cfg`` — THE Pallas routing
-    rule. ``use_pallas`` swaps in the UPE chunk-sort kernel (digit width =
-    ``cfg.radix_bits``), the SCR count kernel, and the fused VMEM merge
-    kernel; one definition shared by ``convert``, ``sample_subgraph`` and
-    the mesh-sharded engine so no path can silently drop a knob.
+    """(chunk_sort_fn, count_fn, merge_fn, digit_pass_fn) for ``cfg`` — THE
+    Pallas routing rule. ``use_pallas`` swaps in the UPE chunk-sort kernel
+    (digit width = ``cfg.radix_bits``), the SCR count kernel, the fused
+    VMEM merge kernel (ladder fan-in = ``cfg.merge_fan_in``), and the tiled
+    global-radix digit-pass kernel pair (histogram tile = ``cfg.w_upe``);
+    one definition shared by ``convert``, ``sample_subgraph`` and the
+    mesh-sharded engine so no path can silently drop a knob.
     """
     if not cfg.use_pallas:
-        return None, None, None
+        return None, None, None, None
     from repro.kernels import ops as _kops
     return (_kops.make_pallas_chunk_sort_fn(cfg.radix_bits),
-            _kops.pallas_count_fn, _kops.pallas_merge_fn)
+            _kops.pallas_count_fn,
+            _kops.make_pallas_merge_fn(cfg.merge_fan_in),
+            _kops.make_pallas_digit_pass_fn(cfg.radix_bits, cfg.w_upe))
 
 
 def convert(coo: COO, cfg: EngineConfig | None = None,
@@ -43,22 +47,31 @@ def convert(coo: COO, cfg: EngineConfig | None = None,
 
     ``cfg.sort_mode`` selects packed single-pass vs two-pass LSD Ordering
     (bit-identical outputs; "auto" packs whenever the VID space fits one
-    int32 key) and ``cfg.radix_bits`` is the digit width of every radix
-    pass on both the jnp and Pallas paths. ``cfg.use_pallas`` routes the
-    chunk sort through the UPE Pallas kernel, the merge tree through the
-    fused VMEM merge kernel, and the pointer build through the SCR Pallas
-    kernel (interpret mode on CPU; Mosaic on TPU). Explicit
+    int32 key), ``cfg.sort_strategy`` the reduction structure of every
+    global sort — chunked radix sort + k-ary merge ladder
+    (``cfg.merge_fan_in`` runs per rung) vs the merge-free global radix
+    sort; "auto" is resolved here through the Table-I cost model
+    (``costmodel.resolve_sort_strategy``) on this graph's (capacity,
+    n_nodes) workload, so the dispatched program is the one the model
+    priced. ``cfg.radix_bits`` is the digit width of every radix pass on
+    both the jnp and Pallas paths. ``cfg.use_pallas`` routes the chunk
+    sort / merge ladder / global digit passes / pointer build through the
+    Pallas kernels (interpret mode on CPU; Mosaic on TPU). Explicit
     ``count_fn``/``chunk_sort_fn`` override.
     """
     cfg = cfg or EngineConfig()
-    k_sort, k_count, merge_fn = kernel_fns(cfg)
+    k_sort, k_count, merge_fn, digit_pass_fn = kernel_fns(cfg)
     chunk_sort_fn = chunk_sort_fn or k_sort
     count_fn = count_fn or k_count
+    strategy = resolve_sort_strategy(
+        cfg, Workload(n=coo.n_nodes, e=coo.capacity))
     sorted_coo = edge_ordering(coo, chunk=min(cfg.w_upe, coo.capacity),
                                radix_bits=cfg.radix_bits,
                                map_batch=cfg.n_upe,
                                chunk_sort_fn=chunk_sort_fn,
-                               merge_fn=merge_fn, mode=cfg.sort_mode)
+                               merge_fn=merge_fn, mode=cfg.sort_mode,
+                               strategy=strategy, fan_in=cfg.merge_fan_in,
+                               digit_pass_fn=digit_pass_fn)
     return data_reshaping(sorted_coo, count_fn=count_fn)
 
 
@@ -83,7 +96,7 @@ def sample_subgraph(csc: CSC, batch_nodes: jnp.ndarray,
     space is batch-sized, so (dst, src) packs into one int32 key.
     """
     cfg = cfg or EngineConfig()
-    k_sort, k_count, merge_fn = kernel_fns(cfg)
+    k_sort, k_count, merge_fn, digit_pass_fn = kernel_fns(cfg)
     chunk_sort_fn = chunk_sort_fn or k_sort
     count_fn = count_fn or k_count
     nodes, e_dst, e_src = sample_khop(
@@ -99,10 +112,13 @@ def sample_subgraph(csc: CSC, batch_nodes: jnp.ndarray,
         src=jnp.pad(sub_coo_raw.src, (0, e_cap - sub_coo_raw.src.shape[0]),
                     constant_values=int(SENTINEL)),
         n_edges=sub_coo_raw.n_edges, n_nodes=n_cap)
+    strategy = resolve_sort_strategy(cfg, Workload(n=n_cap, e=e_cap))
     sub_sorted = edge_ordering(sub_coo, chunk=min(cfg.w_upe, e_cap),
                                radix_bits=cfg.radix_bits,
                                chunk_sort_fn=chunk_sort_fn,
-                               merge_fn=merge_fn, mode=cfg.sort_mode)
+                               merge_fn=merge_fn, mode=cfg.sort_mode,
+                               strategy=strategy, fan_in=cfg.merge_fan_in,
+                               digit_pass_fn=digit_pass_fn)
     sub_csc = data_reshaping(sub_sorted, count_fn=count_fn)
     return Subgraph(csc=sub_csc, order=rmap.order, n_sub_nodes=rmap.n_unique)
 

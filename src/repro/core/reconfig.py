@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 
 from .costmodel import (Calibration, EngineConfig, Workload, best_config,
-                        bitstream_library, estimate_seconds)
+                        bitstream_library, choose_config, estimate_seconds)
 
 # Paper: 230 ms full reconfig; halved when only one region changes.
 RECONFIG_S_FULL = 0.230
@@ -49,8 +49,11 @@ def decide(w: Workload, current: EngineConfig | None,
            reconfig_cost_s: float = RECONFIG_S_PARTIAL) -> ReconfigDecision:
     """DynPre's decision rule: score the library, switch when the predicted
     gain over the current configuration amortizes the reconfiguration.
-    (Shared by ``DynPre`` and ``repro.engine.service.PreprocService``.)"""
-    cand = best_config(w, library, cal)
+    (Shared by ``DynPre`` and ``repro.engine.service.PreprocService``.)
+    The candidate carries a concrete ``sort_strategy`` (``choose_config``
+    pins the Table-I winner), so the dispatched program is the one the
+    model priced."""
+    cand = choose_config(w, library, cal)
     if current is None:
         return ReconfigDecision(True, cand, float("inf"), reconfig_cost_s)
     cur = estimate_seconds(current, w, cal)["total"]

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 
 from .graph import COO, SENTINEL
 from .set_partition import set_partition
-from .set_count import filter_lookup  # noqa: F401  (SCR-path equivalence tests)
 
 
 class ReindexMap:

@@ -80,9 +80,12 @@ def data_reshaping(sorted_coo: COO, ptr_capacity: int | None = None,
                n_nodes=sorted_coo.n_nodes)
 
 
-def graph_convert(coo: COO, chunk: int = 4096, count_fn=None,
+def graph_convert(coo: COO, chunk: int | None = None, count_fn=None,
                   chunk_sort_fn=None, ptr_capacity: int | None = None) -> CSC:
-    """Full graph conversion = Ordering + Reshaping (paper Fig. 3)."""
+    """Full graph conversion = Ordering + Reshaping (paper Fig. 3).
+
+    ``chunk=None`` resolves to ``ordering.DEFAULT_CHUNK`` — the one routed
+    chunk-width default shared with ``EngineConfig.w_upe``."""
     from .ordering import edge_ordering
     sorted_coo = edge_ordering(coo, chunk=chunk, chunk_sort_fn=chunk_sort_fn)
     return data_reshaping(sorted_coo, ptr_capacity=ptr_capacity,

@@ -190,12 +190,19 @@ class PreprocService:
     def decide(self, w: Workload) -> ReconfigDecision:
         """Score ``w`` against the library (Table-I cost model) and decide
         whether the predicted gain amortizes the reconfiguration cost.
+        The candidate is a library entry with the ``sort_strategy`` axis
+        resolved (``costmodel.choose_config``), so the dispatched program
+        is the one the model priced.
 
         Example::
 
+            >>> import dataclasses
             >>> svc = PreprocService(fanouts=(2,))
             >>> d = svc.decide(Workload(n=100, e=1000, l=1, k=2, b=16))
-            >>> d.config in svc.library
+            >>> dataclasses.replace(d.config,
+            ...                     sort_strategy="auto") in svc.library
+            True
+            >>> d.config.sort_strategy != "auto"  # pinned by the model
             True
         """
         return decide(w, self.active_cfg, self.library, self.cal,

@@ -30,9 +30,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.costmodel import EngineConfig
+from repro.core.costmodel import (EngineConfig, Workload,
+                                  resolve_sort_strategy)
 from repro.core.graph import COO, CSC, SENTINEL, Subgraph
-from repro.core.ordering import (_bits_for, _chunk_sort, edge_ordering,
+from repro.core.ordering import (_bits_for, _chunk_sort,
+                                 _global_radix_passes, edge_ordering,
                                  merge_rounds, stable_sort_by_key)
 from repro.core.pipeline import kernel_fns
 from repro.core.pipeline import preprocess as _preprocess_single
@@ -50,20 +52,27 @@ def _dp(mesh: Mesh | None) -> tuple[tuple[str, ...], int]:
 
 
 def shard_sort_by_key(mesh: Mesh, keys: jnp.ndarray, vals: jnp.ndarray,
-                      key_bound: int, chunk: int = 4096,
+                      key_bound: int, chunk: int | None = None,
                       radix_bits: int = 4, map_batch: int = 0,
-                      chunk_sort_fn=None, merge_fn=None
+                      chunk_sort_fn=None, merge_fn=None,
+                      strategy: str = "chunked_merge", fan_in: int = 2,
+                      digit_pass_fn=None
                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Global stable sort with the chunk-sort stage sharded over devices.
+    """Global stable sort with the local sort stage sharded over devices.
 
-    Each dp shard owns ``n / n_dev`` contiguous elements, chunk-radix-sorts
-    them (all lanes vmapped — on the sharded path the devices ARE the
-    lanes) and merges locally to one run; the remaining ``log2(n_dev)``
-    merge rounds run on the global arrays (GSPMD collectives).
-    ``chunk_sort_fn`` swaps in the Pallas UPE kernel and ``merge_fn`` the
-    fused VMEM merge kernel for the *device-local* merge rounds, same
-    contracts as ``core.ordering.stable_sort_by_key`` (the cross-device
-    rounds stay at the jnp level — they are collective by construction).
+    Each dp shard owns ``n / n_dev`` contiguous elements and sorts them to
+    one run — chunk-radix-sort + local k-ary merge ladder under
+    ``strategy="chunked_merge"`` (all lanes vmapped — on the sharded path
+    the devices ARE the lanes), or the merge-free tiled global-radix digit
+    passes under ``strategy="global_radix"`` (each device's span IS the
+    "whole array" of ``core.ordering._global_radix_passes``). Either way
+    the remaining ``log2(n_dev)`` cross-device merge rounds run unchanged
+    on the global arrays (GSPMD collectives) — the strategy reconfigures
+    the per-device reduction structure, not the collective schedule.
+    ``chunk_sort_fn`` swaps in the Pallas UPE kernel, ``merge_fn`` the
+    fused VMEM merge kernel for the *device-local* merge rounds, and
+    ``digit_pass_fn`` the Pallas tiled digit-pass pair, same contracts as
+    ``core.ordering.stable_sort_by_key``.
     Falls back to the single-device sorter — honoring ``map_batch`` (the
     UPE lane bound) there — when the mesh has no dp extent or the buffer
     does not divide. ``vals=None`` runs the whole sharded stack keys-only
@@ -83,7 +92,9 @@ def shard_sort_by_key(mesh: Mesh, keys: jnp.ndarray, vals: jnp.ndarray,
         >>> none is None  # keys-only: no payload moved
         True
     """
+    from repro.core.ordering import DEFAULT_CHUNK
     n = keys.shape[0]
+    chunk = DEFAULT_CHUNK if chunk is None else chunk
     dp, nd = _dp(mesh)
     # the merge tree needs pow2 run counts: device count AND local span
     if nd <= 1 or nd & (nd - 1) or n % nd or (n // nd) & (n // nd - 1):
@@ -91,36 +102,40 @@ def shard_sort_by_key(mesh: Mesh, keys: jnp.ndarray, vals: jnp.ndarray,
                                   radix_bits=radix_bits,
                                   map_batch=map_batch,
                                   chunk_sort_fn=chunk_sort_fn,
-                                  merge_fn=merge_fn)
+                                  merge_fn=merge_fn, strategy=strategy,
+                                  fan_in=fan_in,
+                                  digit_pass_fn=digit_pass_fn)
     local = n // nd
     chunk = min(chunk, local)
     key_bits = _bits_for(key_bound)
     clipped = jnp.minimum(keys, jnp.int32(key_bound))
 
-    if vals is None:
-        def local_run_keys(k_l):
-            if chunk_sort_fn is None:
-                ks, _ = _chunk_sort(k_l, None, chunk, key_bits, radix_bits,
-                                    map_batch=0)
-            else:
-                ks, _ = chunk_sort_fn(k_l, None, chunk, key_bits)
-            ks, _ = merge_rounds(ks, None, chunk, merge_fn=merge_fn)
-            return ks
-
-        fn = shard_map(local_run_keys, mesh=mesh, in_specs=(P(dp),),
-                       out_specs=P(dp), check_vma=False)
-        ks, _ = merge_rounds(fn(clipped), None, local)
-        return jnp.where(ks >= key_bound, SENTINEL, ks), None
-
-    def local_run(k_l, v_l):
+    def local_sorted_run(k_l, v_l):
+        """One device's span → one sorted run, per the strategy."""
+        if strategy == "xla_sort":  # device-local native sort
+            if v_l is None:
+                return jnp.sort(k_l), None
+            return jax.lax.sort([k_l, v_l], num_keys=1, is_stable=True)
+        if strategy == "global_radix":
+            return _global_radix_passes(k_l, v_l, key_bits, chunk,
+                                        radix_bits,
+                                        digit_pass_fn=digit_pass_fn)
         if chunk_sort_fn is None:
             ks, vs = _chunk_sort(k_l, v_l, chunk, key_bits, radix_bits,
                                  map_batch=0)
         else:
             ks, vs = chunk_sort_fn(k_l, v_l, chunk, key_bits)
-        return merge_rounds(ks, vs, chunk, merge_fn=merge_fn)
+        return merge_rounds(ks, vs, chunk, merge_fn=merge_fn,
+                            fan_in=fan_in)
 
-    fn = shard_map(local_run, mesh=mesh, in_specs=(P(dp), P(dp)),
+    if vals is None:
+        fn = shard_map(lambda k_l: local_sorted_run(k_l, None)[0],
+                       mesh=mesh, in_specs=(P(dp),),
+                       out_specs=P(dp), check_vma=False)
+        ks, _ = merge_rounds(fn(clipped), None, local)
+        return jnp.where(ks >= key_bound, SENTINEL, ks), None
+
+    fn = shard_map(local_sorted_run, mesh=mesh, in_specs=(P(dp), P(dp)),
                    out_specs=(P(dp), P(dp)), check_vma=False)
     ks, vs = fn(clipped, vals)
     ks, vs = merge_rounds(ks, vs, local)
@@ -151,14 +166,18 @@ def shard_edge_ordering(mesh: Mesh, coo: COO,
         ([0, 0, 1, 1], [0, 1, 0, 1])
     """
     cfg = cfg or EngineConfig()
-    chunk_sort_fn, _, merge_fn = _kernel_fns(cfg)
+    chunk_sort_fn, _, merge_fn, digit_pass_fn = _kernel_fns(cfg)
+    strategy = resolve_sort_strategy(
+        cfg, Workload(n=coo.n_nodes, e=coo.capacity))
 
     def sort_fn(k, v, bound):
         return shard_sort_by_key(mesh, k, v, bound, chunk=cfg.w_upe,
                                  radix_bits=cfg.radix_bits,
                                  map_batch=cfg.n_upe,
                                  chunk_sort_fn=chunk_sort_fn,
-                                 merge_fn=merge_fn)
+                                 merge_fn=merge_fn, strategy=strategy,
+                                 fan_in=cfg.merge_fan_in,
+                                 digit_pass_fn=digit_pass_fn)
 
     return edge_ordering(coo, sort_fn=sort_fn, mode=cfg.sort_mode)
 
@@ -212,7 +231,7 @@ def shard_convert(mesh: Mesh, coo: COO,
         ([0, 2, 4], [0, 1, 0, 1])
     """
     cfg = cfg or EngineConfig()
-    _, count_fn, _ = _kernel_fns(cfg)
+    _, count_fn, _, _ = _kernel_fns(cfg)
     sorted_coo = shard_edge_ordering(mesh, coo, cfg)
     ptr = shard_pointer_array(mesh, sorted_coo.dst, coo.n_nodes,
                               count_fn=count_fn)

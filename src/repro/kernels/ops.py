@@ -7,9 +7,10 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .merge import fused_merge_rounds, pallas_merge_fn
+from .merge import fused_merge_rounds, make_pallas_merge_fn, pallas_merge_fn
 from .prefix_partition import prefix_partition
-from .radix_sort import (make_pallas_chunk_sort_fn, pallas_chunk_sort_fn,
+from .radix_sort import (global_digit_pass, make_pallas_chunk_sort_fn,
+                         make_pallas_digit_pass_fn, pallas_chunk_sort_fn,
                          radix_sort_chunks, radix_sort_chunks_keys)
 from .set_count import filter_tree_lookup, pallas_count_fn, set_count_less
 from .segment_agg import segment_sum_sorted
@@ -19,6 +20,7 @@ __all__ = [
     "prefix_partition", "radix_sort_chunks", "radix_sort_chunks_keys",
     "pallas_chunk_sort_fn",
     "make_pallas_chunk_sort_fn", "fused_merge_rounds", "pallas_merge_fn",
+    "make_pallas_merge_fn", "global_digit_pass", "make_pallas_digit_pass_fn",
     "set_count_less", "filter_tree_lookup", "pallas_count_fn",
     "segment_sum_sorted", "segment_sum_padded",
 ]

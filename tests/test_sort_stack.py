@@ -1,10 +1,13 @@
 """The de-quadratic'd Ordering stack: packed-key single-pass sort,
-gather-routed relocation, fused VMEM merges.
+gather-routed relocation, fused VMEM merges, and the strategy axis
+(chunked radix sort + k-ary merge ladder vs the merge-free global radix
+sort).
 
 Every path must be *bit-identical*: packed vs two-pass vs the XLA
-comparison-sort baseline, across non-pow2 VID spaces, sentinel-heavy
-padding, the ``radix_bits`` sweep, and the Pallas kernels (chunk sort +
-fused merge) against the jnp formulations.
+comparison-sort baseline, chunked_merge vs global_radix vs auto, across
+non-pow2 VID spaces, sentinel-heavy padding, the ``radix_bits`` and
+``merge_fan_in`` sweeps, and the Pallas kernels (chunk sort + fused k-ary
+merge + tiled digit pass) against the jnp formulations.
 """
 import jax
 import jax.numpy as jnp
@@ -12,9 +15,13 @@ import numpy as np
 import pytest
 
 from repro.core import (COO, SENTINEL, EngineConfig, convert, convert_xla,
-                        random_coo, stable_sort_by_key, supports_packed_keys)
-from repro.core.ordering import edge_ordering, merge_rounds
-from repro.core.set_partition import gather_sources_from_counts
+                        global_radix_sort_by_key, random_coo,
+                        stable_sort_by_key, supports_packed_keys)
+from repro.core.ordering import (edge_ordering, merge_round_fan_ins,
+                                 merge_rounds, merge_sorted_k)
+from repro.core.set_partition import (digit_relocation_sources,
+                                      gather_sources_from_counts,
+                                      tiled_digit_sources)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -116,6 +123,155 @@ def test_stable_sort_radix_bits_sweep():
                                     radix_bits=rb)
         np.testing.assert_array_equal(ks, keys[order], rb)
         np.testing.assert_array_equal(vs, order, rb)
+
+
+# ------------------------------------------------------- strategy equality
+@pytest.mark.parametrize("n_nodes", [1, 7, 50, 997, 5000, 32767, 40000])
+def test_strategy_equality_sweep_across_vid_widths(n_nodes):
+    """global_radix == chunked_merge == lexsort for every key scheme the
+    VID space supports, over non-pow2 VID spaces including the widest
+    packed-capable one (32767) and a two-pass-only one (40000)."""
+    e = min(4 * n_nodes, 300)
+    coo, dst, src = _coo(n_nodes, e, cap=512, seed=n_nodes)
+    order = np.lexsort((src, dst))
+    modes = ["two_pass"] + (["packed"] if supports_packed_keys(n_nodes)
+                            else [])
+    for mode in modes:
+        for strategy in ("chunked_merge", "global_radix", "xla_sort"):
+            out = edge_ordering(coo, chunk=128, mode=mode,
+                                strategy=strategy)
+            tag = (n_nodes, mode, strategy)
+            np.testing.assert_array_equal(np.asarray(out.dst)[:e],
+                                          dst[order], tag)
+            np.testing.assert_array_equal(np.asarray(out.src)[:e],
+                                          src[order], tag)
+            assert np.all(np.asarray(out.dst)[e:] == SEN), tag
+            assert np.all(np.asarray(out.src)[e:] == SEN), tag
+
+
+@pytest.mark.parametrize("fan_in", [2, 3, 4, 8])
+def test_merge_fan_in_sweep_bit_identical(fan_in):
+    """The k-ary ladder is a refinement of the binary tree: any fan-in
+    yields the same stable-sort output (and the rung count matches
+    merge_round_fan_ins)."""
+    coo, dst, src = _coo(200, 900, cap=2048, seed=21)
+    ref = edge_ordering(coo, chunk=128, fan_in=2)
+    got = edge_ordering(coo, chunk=128, fan_in=fan_in)
+    np.testing.assert_array_equal(np.asarray(got.dst), np.asarray(ref.dst))
+    np.testing.assert_array_equal(np.asarray(got.src), np.asarray(ref.src))
+    # rung count drops from log2 to log_k
+    assert len(merge_round_fan_ins(2048, 128, fan_in)) <= \
+        len(merge_round_fan_ins(2048, 128, 2))
+
+
+def test_merge_ladder_handles_non_pow2_run_counts():
+    """Regression: a run count with no divisor ≤ fan_in (3 runs under
+    fan_in=2) merges in one wider rung instead of hanging, and a chunk
+    that does not tile n contributes zero rounds to the cost model."""
+    assert merge_round_fan_ins(384, 128, 2) == [3]
+    assert merge_round_fan_ins(1152, 128, 2) == [3, 3]
+    assert merge_round_fan_ins(4096, 3000, 2) == []
+    rng = np.random.default_rng(20)
+    keys = rng.integers(0, 500, 384).astype(np.int32)
+    order = np.argsort(keys, kind="stable")
+    ks, vs = stable_sort_by_key(jnp.array(keys),
+                                jnp.arange(384, dtype=jnp.int32), 500,
+                                chunk=128)
+    np.testing.assert_array_equal(ks, keys[order])
+    np.testing.assert_array_equal(vs, order)
+
+
+def test_merge_sorted_k_matches_pairwise_fold():
+    rng = np.random.default_rng(22)
+    for k, run in [(2, 32), (3, 16), (4, 64), (8, 8)]:
+        kr = np.sort(rng.integers(0, 40, (k, run)).astype(np.int32), axis=1)
+        vr = np.arange(k * run, dtype=np.int32).reshape(k, run)
+        got_k, got_v = merge_sorted_k(jnp.array(kr), jnp.array(vr))
+        flat_k = kr.reshape(-1)
+        flat_v = vr.reshape(-1)
+        order = np.argsort(flat_k, kind="stable")
+        np.testing.assert_array_equal(np.asarray(got_k), flat_k[order], k)
+        np.testing.assert_array_equal(np.asarray(got_v), flat_v[order], k)
+        kk, none = merge_sorted_k(jnp.array(kr), None)
+        assert none is None
+        np.testing.assert_array_equal(np.asarray(kk), flat_k[order])
+
+
+def test_global_radix_sentinel_heavy_tail():
+    """Capacity ≫ edges under the merge-free strategy: the padded tail
+    must stay at the tail through every digit pass."""
+    coo, dst, src = _coo(30, 20, cap=1024, seed=23)
+    for mode in ("packed", "two_pass"):
+        out = edge_ordering(coo, chunk=256, mode=mode,
+                            strategy="global_radix")
+        order = np.lexsort((src, dst))
+        np.testing.assert_array_equal(np.asarray(out.dst)[:20], dst[order])
+        np.testing.assert_array_equal(np.asarray(out.src)[:20], src[order])
+        assert np.all(np.asarray(out.dst)[20:] == SEN), mode
+        assert np.all(np.asarray(out.src)[20:] == SEN), mode
+
+
+def test_global_radix_keys_only_matches_payload_sort():
+    """Keys-only and payload-carrying global radix sorts agree on the key
+    stream (the packed Ordering rides no payload)."""
+    rng = np.random.default_rng(24)
+    keys = jnp.array(rng.integers(0, 700, 1024), jnp.int32)
+    vals = jnp.arange(1024, dtype=jnp.int32)
+    want_k, want_v = global_radix_sort_by_key(keys, vals, 700, tile=128)
+    got_k, none = global_radix_sort_by_key(keys, None, 700, tile=128)
+    assert none is None
+    np.testing.assert_array_equal(got_k, want_k)
+    order = np.argsort(np.asarray(keys), kind="stable")
+    np.testing.assert_array_equal(np.asarray(want_v), order)
+
+
+def test_tiled_digit_sources_equals_flat_router():
+    """The two-level rank-arithmetic router is the flat [N, B] router,
+    tile by tile — any tile size, any bucket count."""
+    rng = np.random.default_rng(25)
+    for n, tile, nb in [(256, 32, 4), (512, 128, 16), (64, 64, 8),
+                        (128, 256, 2)]:
+        d = jnp.array(rng.integers(0, nb, n).astype(np.int32))
+        ref, _ = digit_relocation_sources(d, nb)
+        got = tiled_digit_sources(d, nb, tile)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref),
+                                      (n, tile, nb))
+
+
+def test_convert_strategies_bit_identical_incl_pallas():
+    """convert under every (strategy × backend) — including the Pallas
+    tiled digit-pass pair and the k-ary fused merge kernel — equals the
+    XLA baseline CSC."""
+    coo, dst, src = _coo(120, 900, cap=1024, seed=26)
+    ref = convert_xla(coo)
+    for strategy in ("chunked_merge", "global_radix", "xla_sort", "auto"):
+        for use_pallas in (False, True):
+            cfg = EngineConfig(w_upe=256, sort_strategy=strategy,
+                               use_pallas=use_pallas, merge_fan_in=4)
+            csc = convert(coo, cfg)
+            tag = (strategy, use_pallas)
+            np.testing.assert_array_equal(csc.ptr, ref.ptr, tag)
+            np.testing.assert_array_equal(csc.idx[:900], ref.idx[:900], tag)
+
+
+def test_preprocess_strategies_bit_identical_end_to_end():
+    """The full pipeline is strategy-invariant: same sampled subgraph
+    bit-for-bit under chunked_merge, global_radix and auto."""
+    from repro.core import preprocess
+    coo, dst, src = _coo(150, 1200, cap=2048, seed=27)
+    bn = jnp.arange(8, dtype=jnp.int32)
+    key = jax.random.PRNGKey(0)
+    subs = [preprocess(coo, bn, (4, 3), key,
+                       EngineConfig(w_upe=256, sort_strategy=s))
+            for s in ("chunked_merge", "global_radix", "xla_sort", "auto")]
+    for got in subs[1:]:
+        np.testing.assert_array_equal(np.asarray(subs[0].order),
+                                      np.asarray(got.order))
+        np.testing.assert_array_equal(np.asarray(subs[0].csc.ptr),
+                                      np.asarray(got.csc.ptr))
+        np.testing.assert_array_equal(np.asarray(subs[0].csc.idx),
+                                      np.asarray(got.csc.idx))
+        assert int(subs[0].n_sub_nodes) == int(got.n_sub_nodes)
 
 
 # ------------------------------------------------------------ gather router
