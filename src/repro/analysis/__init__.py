@@ -1,0 +1,24 @@
+"""repro.analysis — static enforcement of the perf invariants the cost
+model prices.
+
+Two passes behind one CLI (``python -m repro.analysis``):
+
+* **HLO contract checker** (``contracts.py`` + ``checker.py``): lowers
+  every jitted hot path and checks the compiled program against
+  model-derived invariants — scatter-free convert, while-op census equal
+  to the cost model's merge-round/digit-pass structure, collective-byte
+  ceilings on the sharded paths, zero-recompile cache guards.
+* **AST lint** (``lint.py``): repo-specific source rules over ``src/repro``
+  targeting previously shipped bug classes (raw ``jax.jit`` outside the
+  module-level cache, scatter writes in the convert spine, traced-value
+  branching, host numpy under jit, mutable defaults).
+
+``lint`` imports no jax and is safe anywhere; import
+``repro.analysis.checker`` only after the device environment is set up
+(the CLI handles ``XLA_FLAGS`` ordering). See docs/ANALYSIS.md.
+"""
+from repro.analysis.lint import (RULES, LintViolation, lint_file,
+                                 lint_source, lint_tree)
+
+__all__ = ["RULES", "LintViolation", "lint_file", "lint_source",
+           "lint_tree"]

@@ -1,0 +1,86 @@
+"""CLI: ``python -m repro.analysis [--hlo] [--lint] [--json]``.
+
+Runs the AST lint pass and/or the HLO contract checker and exits non-zero
+on any violation (CI's static-analysis job runs exactly this). With
+neither ``--hlo`` nor ``--lint``, both passes run.
+
+The sharded contract needs virtual devices: ``--devices N`` (default 8)
+appends ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS``
+*before* jax is imported, which is why the checker import lives inside
+``main`` — importing ``repro.analysis.checker`` at module top would
+initialize jax on a single device first.
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis: AST lint + compiled-HLO contracts")
+    ap.add_argument("--hlo", action="store_true",
+                    help="run only the HLO contract checker")
+    ap.add_argument("--lint", action="store_true",
+                    help="run only the AST lint pass")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit one JSON report on stdout")
+    ap.add_argument("--grid", choices=("smoke", "full"), default="full",
+                    help="contract sweep size (default: full)")
+    ap.add_argument("--contracts", default="convert,sample,shard,serve",
+                    help="comma-separated contract subset for --hlo")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="virtual host devices for the sharded contract")
+    ap.add_argument("--root", default=None,
+                    help="lint root (default: the installed src/repro)")
+    args = ap.parse_args(argv)
+    run_lint = args.lint or not args.hlo
+    run_hlo = args.hlo or not args.lint
+
+    report: dict = {}
+    failed = False
+
+    if run_lint:
+        from repro.analysis.lint import lint_tree
+        violations = lint_tree(args.root)
+        report["lint"] = {
+            "ok": not violations,
+            "violations": [str(v) for v in violations],
+        }
+        failed |= bool(violations)
+        if not args.as_json:
+            for v in violations:
+                print(str(v), file=sys.stderr)
+            print(f"lint: {len(violations)} violation(s)")
+
+    if run_hlo:
+        if args.devices > 1 and "xla_force_host_platform_device_count" \
+                not in os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") +
+                f" --xla_force_host_platform_device_count={args.devices}")
+        os.environ.setdefault("JAX_PLATFORM_NAME", "cpu")
+        from repro.analysis import checker
+        progress = None if args.as_json else (
+            lambda msg: print(f"  .. {msg}", file=sys.stderr))
+        parts = tuple(p for p in args.contracts.split(",") if p)
+        rep = checker.check_all(grid=args.grid, parts=parts,
+                                progress=progress)
+        report["hlo"] = rep.to_json()
+        failed |= not rep.ok
+        if not args.as_json:
+            for v in rep.violations:
+                print(str(v), file=sys.stderr)
+            for s in rep.skipped:
+                print(f"skipped: {s}")
+            print(f"hlo: {rep.checks} checks over {rep.groups} lowered "
+                  f"program groups, {len(rep.violations)} violation(s)")
+
+    if args.as_json:
+        print(json.dumps(report, indent=2))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,302 @@
+"""Declarative contracts over the compiled hot paths.
+
+Every jitted hot path — ``pipeline.convert`` per sort strategy,
+``sample_subgraph``, the ``engine.shard`` sorted convert, the serve step —
+registers machine-checkable invariants over its lowered HLO:
+
+* **forbidden / required ops** — no ``scatter`` anywhere on the convert
+  spine; no native ``sort`` on the radix strategies (their order comes from
+  histogram + gather); exactly the priced number of ``sort`` ops on
+  xla_sort paths.
+* **while-op budgets** — computed FROM the cost model
+  (``costmodel.convert_while_count`` / ``shard_convert_while_count``, which
+  are ``merge_round_count``/``digit_pass_count`` re-expressed as a lowering
+  census). The model and the compiled program must agree for every config
+  in ``bitstream_library()`` across the workload grid — a disagreement
+  means the model is pricing a program that does not run.
+* **collective-byte ceilings** — ``hlo_analysis.collective_bytes`` on the
+  sharded paths must stay under ``costmodel.shard_collective_bytes_budget``.
+* **recompile guards** — re-dispatching the module-level jit entry
+  (``engine.service.convert_jit``) with an already-seen ``(cfg, bucket)``
+  must add ZERO cache entries (cache-size==1 per key).
+
+The registry is pure data + model arithmetic (this module does lower
+nothing); ``analysis/checker.py`` lowers one representative program per
+structure group and evaluates every case against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.costmodel import (EngineConfig, SORT_STRATEGIES, Workload,
+                                  bitstream_library, convert_while_count,
+                                  merge_round_count,
+                                  shard_collective_bytes_budget,
+                                  shard_convert_while_count,
+                                  sort_op_count, sort_pass_count)
+from repro.core.graph import next_pow2
+from repro.core.ordering import supports_packed_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class Expectation:
+    """What the lowered program must look like. ``None`` = not asserted."""
+
+    forbidden_ops: tuple[str, ...] = ()   # opcode substrings, e.g. "scatter"
+    required_ops: tuple[str, ...] = ()
+    while_count: int | None = None        # exact while-op census
+    sort_count: int | None = None         # exact native-sort-op census
+    collective_ceiling: float | None = None  # loop-multiplied bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One (config, workload) point of one contract.
+
+    ``structure`` is the dedupe key: cases with equal keys lower to the
+    same HLO (the program depends on shapes + the resolved strategy knobs,
+    not on SCR geometry), so the checker compiles once per key and
+    evaluates every member case against that one program — which also
+    proves the members' expectations are mutually consistent.
+    """
+
+    contract: str
+    label: str
+    cfg: EngineConfig
+    workload: Workload
+    strategy: str
+    structure: tuple
+    expect: Expectation
+    n_dev: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    contract: str
+    case: str
+    invariant: str
+    message: str
+
+    def __str__(self) -> str:
+        return (f"[{self.contract}] {self.case}: {self.invariant} — "
+                f"{self.message}")
+
+
+# Workload grid: three edge scales in the packed-key regime plus one node
+# scale past the packed-key bound (2·bits(70000) > 31 → two-pass Ordering).
+CONVERT_WORKLOADS = (
+    Workload(n=200, e=512),
+    Workload(n=200, e=2048),
+    Workload(n=200, e=8192),
+    Workload(n=70000, e=2048),
+)
+SMOKE_WORKLOADS = (Workload(n=200, e=2048),)
+
+# Off-library configs that exercise program shapes the generated library
+# never hits: a k-ary ladder, the lax.map lane path (0 < n_upe < n_chunks),
+# a wide digit, and the forced two-pass key scheme.
+EXTRA_CONFIGS = (
+    EngineConfig(w_upe=256, n_upe=8, merge_fan_in=4),
+    EngineConfig(w_upe=256, n_upe=2),
+    EngineConfig(w_upe=512, n_upe=8, radix_bits=8),
+    EngineConfig(w_upe=256, n_upe=8, sort_mode="two_pass"),
+)
+SMOKE_CONFIGS = (
+    EngineConfig(),
+    EngineConfig(w_upe=256, n_upe=2),
+    EngineConfig(w_upe=512, n_upe=8, merge_fan_in=4),
+)
+
+
+def convert_structure(cfg: EngineConfig, w: Workload,
+                      strategy: str) -> tuple:
+    """Program-identity key for the compiled ``pipeline.convert``.
+
+    Two configs with equal keys trace to the same jaxpr: the program is a
+    function of shapes (n, pow2 edge capacity), the resolved key scheme,
+    the strategy, and — on the radix paths — the chunk width, digit width,
+    ladder fan-in and the lane-batch routing (vmap when ``n_upe`` covers
+    the chunk grid, ``lax.map`` over ``n_upe``-sized batches otherwise).
+    SCR geometry (w_scr/n_scr) prices Reshaping but never changes the
+    program, which is what collapses the 81-config library to a handful of
+    lowered programs per workload.
+    """
+    e = next_pow2(w.e)
+    passes = sort_pass_count(cfg, w)
+    if strategy == "xla_sort":
+        extra: tuple = ()
+    else:
+        chunk = min(cfg.w_upe, e)
+        n_chunks = e // chunk
+        lax_map = 0 < cfg.n_upe < n_chunks
+        extra = (chunk, cfg.radix_bits, cfg.merge_fan_in,
+                 cfg.n_upe if lax_map else 0)
+    return (strategy, passes, w.n, e) + extra
+
+
+def convert_expectation(cfg: EngineConfig, w: Workload,
+                        strategy: str) -> Expectation:
+    """The census ``costmodel`` prices for this (cfg, workload, strategy):
+    scatter-free always, native sorts only on xla_sort, while ops exactly
+    ``convert_while_count`` (= the merge-round/digit-pass structure of
+    ``merge_round_count`` plus the pointer-build rank search)."""
+    forbidden = ("scatter",)
+    if strategy != "xla_sort":
+        forbidden = ("scatter", "sort")
+    return Expectation(
+        forbidden_ops=forbidden,
+        required_ops=("gather",),
+        while_count=convert_while_count(cfg, w, strategy),
+        sort_count=sort_op_count(cfg, w, strategy),
+    )
+
+
+def convert_cases(grid: str = "full") -> list[Case]:
+    """The tentpole sweep: every library config × the workload grid × every
+    sort strategy (strategy forced, so all three programs are checked for
+    every config — ``auto`` would only check the model's winner)."""
+    if grid == "smoke":
+        workloads, configs = SMOKE_WORKLOADS, SMOKE_CONFIGS
+    else:
+        workloads = CONVERT_WORKLOADS
+        configs = tuple(bitstream_library()) + EXTRA_CONFIGS
+    cases = []
+    for w in workloads:
+        for base in configs:
+            for strategy in SORT_STRATEGIES:
+                cfg = dataclasses.replace(base, sort_strategy=strategy)
+                cases.append(Case(
+                    contract="convert",
+                    label=f"{cfg.key} n={w.n} e={w.e}",
+                    cfg=cfg, workload=w, strategy=strategy,
+                    structure=convert_structure(cfg, w, strategy),
+                    expect=convert_expectation(cfg, w, strategy)))
+    return cases
+
+
+SAMPLE_FANOUTS = (2, 2)
+SAMPLE_BATCH = 8
+
+
+def _sample_sub_workload() -> Workload:
+    """The padded subgraph ``sample_subgraph`` re-converts: capacity is the
+    pow2 bucket of the sampled edge count, VID space is the node budget
+    (seeds + every frontier)."""
+    frontier = nodes = SAMPLE_BATCH
+    edges = 0
+    for k in SAMPLE_FANOUTS:
+        frontier *= k
+        nodes += frontier
+        edges += frontier
+    return Workload(n=nodes, e=next_pow2(edges))
+
+
+def sample_expectation(cfg: EngineConfig, strategy: str) -> Expectation:
+    """``sample_subgraph``'s program: Selecting + Reindexing + the sub-COO
+    re-conversion. The RNG primitives lower to while loops (threefry), so
+    the while census is not model-owned here; the contract pins what IS
+    priced: scatter-free relocation and the exact native-sort census — the
+    two Reindexing argsorts plus the sub-convert's sorts when (and only
+    when) the forced strategy is xla_sort."""
+    sub = _sample_sub_workload()
+    sub_sorts = sort_op_count(cfg, sub, strategy)
+    return Expectation(
+        forbidden_ops=("scatter",),
+        required_ops=("gather",),
+        sort_count=2 + sub_sorts,
+    )
+
+
+def sample_cases(grid: str = "full") -> list[Case]:
+    w = Workload(n=200, e=2048, l=len(SAMPLE_FANOUTS),
+                 k=max(SAMPLE_FANOUTS), b=SAMPLE_BATCH)
+    cases = []
+    for strategy in SORT_STRATEGIES:
+        cfg = EngineConfig(w_upe=256, n_upe=8, sort_strategy=strategy)
+        cases.append(Case(
+            contract="sample",
+            label=f"{cfg.key} fanouts={SAMPLE_FANOUTS} b={SAMPLE_BATCH}",
+            cfg=cfg, workload=w, strategy=strategy,
+            structure=("sample", strategy),
+            expect=sample_expectation(cfg, strategy)))
+    return cases
+
+
+def shard_expectation(cfg: EngineConfig, w: Workload, n_dev: int,
+                      strategy: str) -> Expectation:
+    """The sharded convert: scatter-free, while census from
+    ``shard_convert_while_count`` (local Ordering + 2 rank searches per
+    cross-device merge round + pointer build), collective bytes under
+    ``shard_collective_bytes_budget``. Native sorts are allowed — the
+    xla_sort strategy sorts inside the shard_map body."""
+    return Expectation(
+        forbidden_ops=("scatter",),
+        required_ops=("all-gather",),
+        while_count=shard_convert_while_count(cfg, w, n_dev, strategy),
+        collective_ceiling=shard_collective_bytes_budget(cfg, w, n_dev),
+    )
+
+
+def shard_cases(n_dev: int, grid: str = "full") -> list[Case]:
+    w = Workload(n=200, e=2048)
+    cases = []
+    for strategy in SORT_STRATEGIES:
+        cfg = EngineConfig(w_upe=256, n_upe=8, sort_strategy=strategy)
+        cases.append(Case(
+            contract="shard",
+            label=f"{cfg.key} e={w.e} nd={n_dev}",
+            cfg=cfg, workload=w, strategy=strategy,
+            structure=("shard", strategy, n_dev),
+            expect=shard_expectation(cfg, w, n_dev, strategy),
+            n_dev=n_dev))
+    return cases
+
+
+def serve_expectation() -> Expectation:
+    """The serve decode step: a fixed-slot ring of dynamic-update-slices —
+    no scatter, no sort, ever. Its while census belongs to the model stack
+    (scan over layers), not the preprocessing model, so it is unasserted;
+    the recompile guard (step_cache_size()==1 across heterogeneous request
+    traffic) is enforced by the checker's runtime leg."""
+    return Expectation(
+        forbidden_ops=("scatter", "sort"),
+        required_ops=("dynamic-update-slice",),
+    )
+
+
+def two_pass_boundary_nodes() -> int:
+    """First workload-grid node count past the packed-key bound (documents
+    why CONVERT_WORKLOADS carries n=70000)."""
+    assert not supports_packed_keys(70000)
+    return 70000
+
+
+def registry_summary() -> dict:
+    """Contract registry overview (docs + ``--json`` report header)."""
+    convert = convert_cases("full")
+    return {
+        "contracts": ["convert", "sample", "shard", "serve"],
+        "convert_cases": len(convert),
+        "convert_groups": len({c.structure for c in convert}),
+        "workloads": [dataclasses.asdict(w) for w in CONVERT_WORKLOADS],
+        "strategies": list(SORT_STRATEGIES),
+        "library_size": len(bitstream_library()),
+    }
+
+
+def model_self_consistency(cfg: EngineConfig, w: Workload,
+                           strategy: str) -> str | None:
+    """Cross-check the census arithmetic against ``merge_round_count``
+    itself: the ladder the census counts k² rank searches over must have
+    exactly the rounds the model prices. Returns an error string or None.
+    """
+    from repro.core.costmodel import _merge_fan_ins
+    rounds = merge_round_count(cfg, w, strategy)
+    if strategy in ("global_radix", "xla_sort"):
+        want = 0
+    else:
+        want = sort_pass_count(cfg, w) * len(_merge_fan_ins(cfg, w))
+    if rounds != want:
+        return (f"merge_round_count={rounds} but the census ladder has "
+                f"{want} rounds")
+    return None

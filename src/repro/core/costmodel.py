@@ -217,6 +217,97 @@ def merge_round_count(cfg: EngineConfig, w: Workload,
     return sort_pass_count(cfg, w) * len(_merge_fan_ins(cfg, w))
 
 
+def _ladder_while_count(fan_ins: list[int]) -> int:
+    """While ops one chunked_merge ladder traversal lowers to: a fan-in-2
+    rung is a pair of rank-search fori_loops; a k-ary rung runs the full
+    k² cross-run search grid."""
+    return sum(2 if k == 2 else k * k for k in fan_ins)
+
+
+def sort_while_count(cfg: EngineConfig, w: Workload,
+                     strategy: str | None = None) -> int:
+    """While ops the compiled edge Ordering lowers to — the census side of
+    ``merge_round_count``, consumed by the ``repro.analysis`` contract
+    checker (model and program must agree for every library config).
+
+    chunked_merge: per global sort, one digit-scan ``lax.scan`` over the
+    chunk grid (+1 when the lane batch routes through ``lax.map``, i.e.
+    ``0 < n_upe < n_chunks``) plus the ladder rungs. global_radix unrolls
+    its digit passes statically and xla_sort is a single native sort op —
+    both lower to zero while ops.
+    """
+    strategy = strategy or resolve_sort_strategy(cfg, w)
+    if strategy in ("global_radix", "xla_sort"):
+        return 0
+    e = next_pow2(w.e)
+    n_chunks = e // min(cfg.w_upe, e)
+    lax_map = 1 if 0 < cfg.n_upe < n_chunks else 0
+    return sort_pass_count(cfg, w) * (
+        1 + lax_map + _ladder_while_count(_merge_fan_ins(cfg, w)))
+
+
+def convert_while_count(cfg: EngineConfig, w: Workload,
+                        strategy: str | None = None) -> int:
+    """While ops in the whole compiled ``pipeline.convert``: the Ordering
+    census plus the one ``rank_in_sorted`` pointer-build fori_loop."""
+    return sort_while_count(cfg, w, strategy) + 1
+
+
+def sort_op_count(cfg: EngineConfig, w: Workload,
+                  strategy: str | None = None) -> int:
+    """Native ``sort`` ops in the compiled Ordering: the radix strategies
+    must lower to zero (their order is produced by histogram + gather);
+    xla_sort dispatches one per global sort pass."""
+    strategy = strategy or resolve_sort_strategy(cfg, w)
+    return sort_pass_count(cfg, w) if strategy == "xla_sort" else 0
+
+
+def shard_sort_while_count(cfg: EngineConfig, w: Workload, n_dev: int,
+                           strategy: str | None = None) -> int:
+    """Census for ``engine.shard.shard_sort_by_key``: per global sort, the
+    local per-device Ordering (on the e/n_dev shard) plus log₂(n_dev)
+    cross-device merge rounds at two rank-search fori_loops each (the
+    cross rounds are always fan-in 2)."""
+    strategy = strategy or resolve_sort_strategy(cfg, w)
+    e = next_pow2(w.e)
+    local = max(1, e // max(1, n_dev))
+    if strategy in ("global_radix", "xla_sort"):
+        local_whiles = 0
+    else:
+        # the sharded local sort always vmaps (devices ARE the lanes:
+        # shard_sort_by_key passes map_batch=0), so no lax.map term here
+        chunk = min(cfg.w_upe, local)
+        local_whiles = 1 + _ladder_while_count(
+            merge_round_fan_ins(local, chunk, cfg.merge_fan_in))
+    cross = 2 * len(merge_round_fan_ins(e, local, 2))
+    return sort_pass_count(cfg, w) * (local_whiles + cross)
+
+
+def shard_convert_while_count(cfg: EngineConfig, w: Workload, n_dev: int,
+                              strategy: str | None = None) -> int:
+    """While census of the compiled ``shard_convert`` (sharded Ordering +
+    the pointer-build fori_loop)."""
+    return shard_sort_while_count(cfg, w, n_dev, strategy) + 1
+
+
+def shard_collective_bytes_budget(cfg: EngineConfig, w: Workload,
+                                  n_dev: int) -> float:
+    """Ceiling on loop-trip-multiplied collective bytes in the compiled
+    sharded convert (``hlo_analysis.collective_bytes`` census).
+
+    The ideal schedule all-gathers one int32 stream per cross-device merge
+    round per global sort (two streams when the two-pass key scheme carries
+    a payload); the 2× slack covers the pointer-build's replicated-input
+    all-gather and partitioner bookkeeping, while still flagging an
+    accidental fall-back to fully replicated sorting (≳ n_dev× the ideal).
+    """
+    passes = sort_pass_count(cfg, w)
+    streams = 1 if passes == 1 else 2
+    e = next_pow2(w.e)
+    rounds = max(1, len(merge_round_fan_ins(e, e // max(1, n_dev), 2)))
+    return 2.0 * passes * streams * rounds * 4.0 * e
+
+
 def relocation_bytes(cfg: EngineConfig, w: Workload,
                      strategy: str | None = None) -> float:
     """HBM bytes the Ordering's full-array relocations stream (Table-I

@@ -66,6 +66,10 @@ def build_reindex_map(vids: jnp.ndarray, numbering: str = "first_occurrence"
         # new VID = rank of first occurrence position
         perm = jnp.argsort(first_pos)  # new_id -> rank
         order = jnp.where(perm < n_unique, uniq_vids[perm], SENTINEL)
+        # repro: allow-scatter-write — argsort-inverse on a batch-sized
+        # permutation (not the edge spine); XLA folds it into the sort's
+        # gather and the sample HLO contract asserts the compiled program
+        # stays scatter-free.
         rank_to_new = jnp.zeros((n,), jnp.int32).at[perm].set(
             jnp.arange(n, dtype=jnp.int32))
     elif numbering == "sorted":

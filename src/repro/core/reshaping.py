@@ -61,6 +61,9 @@ def build_pointer_array_serial(sorted_dst: jnp.ndarray, n_nodes: int
     def body(hist, d):
         hist = jax.lax.cond(
             d < n_nodes,
+            # repro: allow-scatter-write — this IS the serial scatter
+            # baseline the paper's SCR replaces; it exists to be measured
+            # against, never dispatched by the engine.
             lambda h: h.at[d].add(1),
             lambda h: h,
             hist)

@@ -281,5 +281,8 @@ def jit_shard_preprocess(mesh: Mesh):
         >>> jit_shard_preprocess(mesh) is jit_shard_preprocess(mesh)
         True
     """
+    # repro: allow-raw-jit — the lru_cache on the mesh IS the module-level
+    # cache: one jit wrapper per mesh for the process lifetime, so repeat
+    # dispatches reuse one compile cache exactly like service.convert_jit.
     return jax.jit(partial(shard_preprocess, mesh),
                    static_argnames=("fanouts", "cfg"))

@@ -177,6 +177,19 @@ def _call_graph(comps: dict[str, list[str]]):
     return calls, mult
 
 
+def build_call_graph(hlo_text: str):
+    """Parse HLO text into its loop-trip-multiplied call graph.
+
+    Returns ``(comps, calls, mult)``: computation name → instruction
+    lines, name → [(callee, trip multiplier)], and name → total execution
+    multiplier from every entry. The one shared walk consumed by the
+    ``hlo_inspect`` CLI and the ``repro.analysis`` contract checker.
+    """
+    comps = _split_computations(hlo_text)
+    calls, mult = _call_graph(comps)
+    return comps, calls, mult
+
+
 _SKIP_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
              "constant", "copy", "while", "conditional", "custom-call",
              "after-all", "partition-id", "replica-id"}
@@ -206,8 +219,8 @@ def _build_symtab(lines: list[str]) -> dict[str, list[int]]:
     return tab
 
 
-def _dot_flops_line(line: str, symtab: dict[str, list[int]] | None = None
-                    ) -> float:
+def dot_flops_line(line: str, symtab: dict[str, list[int]] | None = None
+                   ) -> float:
     """2·(output elements)·(contraction size); operands are shapeless
     references, so the lhs shape comes from the computation's symtab."""
     mo = re.search(r"=\s*(?:\()?\w+\[([\d,]*)\]", line)
@@ -286,7 +299,7 @@ def loop_aware_stats(hlo_text: str) -> LoopAwareStats:
             opm = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z\-]+)\(", line)
             op = opm.group(1) if opm else None
             if " dot(" in line:
-                dot_flops += _dot_flops_line(line, symtab) * m
+                dot_flops += dot_flops_line(line, symtab) * m
             if op in _TRANSC_OPS and not is_internal:
                 mo = re.search(r"=\s*(?:\()?\w+\[([\d,]*)\]", line)
                 if mo:

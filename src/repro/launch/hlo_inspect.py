@@ -1,75 +1,28 @@
-"""Developer tool: loop-aware per-op inspection of a compiled cell's HLO.
+"""Developer CLI: loop-aware per-op inspection of a compiled cell's HLO.
+
+A thin front-end over `launch/hlo_analysis.py` — the computation split,
+trip-count math, call-graph walk, dot-FLOP and collective accounting all
+live there (shared with the `repro.analysis` contract checker); this module
+only builds the cell, compiles it, and pretty-prints ranked rows.
 
 PYTHONPATH=src python -m repro.launch.hlo_inspect --arch X --shape Y \
-    [--mesh single] [--top 15]
+    [--mesh single] [--top 15] [--collectives] [--dump out.txt]
 """
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                            " --xla_force_host_platform_device_count=512")
 import argparse
-import collections
 import re
 
 import jax
 
-
-def build_call_graph(hlo):
-    from repro.launch.hlo_analysis import _split_computations, _trip_count
-    comps = _split_computations(hlo)
-    calls = collections.defaultdict(list)
-    for name, lines in comps.items():
-        for line in lines:
-            if "while(" in line:
-                bm = re.search(r"body=%?([\w.\-]+)", line)
-                cm = re.search(r"condition=%?([\w.\-]+)", line)
-                if bm and bm.group(1) in comps:
-                    tc = _trip_count(comps.get(cm.group(1), [])) if cm else 1
-                    calls[name].append((bm.group(1), tc))
-            else:
-                for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)",
-                                     line):
-                    if m.group(1) in comps and m.group(1) != name:
-                        calls[name].append((m.group(1), 1))
-    mult = collections.defaultdict(int)
-    called = {c for lst in calls.values() for c, _ in lst}
-    entries = [n for n in comps if n not in called]
-
-    def walk(n, m, seen):
-        mult[n] += m
-        for c, k in calls.get(n, []):
-            if c not in seen:
-                walk(c, m * k, seen | {n})
-
-    for e in entries:
-        walk(e, 1, frozenset())
-    return comps, mult
-
-
-def dot_flops_line(line):
-    mo = re.search(r"=\s*(?:\()?\w+\[([\d,]*)\]", line)
-    if not mo:
-        return 0
-    out = 1
-    for d in mo.group(1).split(","):
-        if d:
-            out *= int(d)
-    mk = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-    shapes = re.findall(r"(?:bf16|f16|f32|f64|s32|s8|u32)\[([\d,]*)\]",
-                        line[line.find("dot("):])
-    k = 1
-    if shapes and mk and mk.group(1):
-        lhs = [int(x) for x in shapes[0].split(",") if x]
-        for ci in mk.group(1).split(","):
-            if ci and int(ci) < len(lhs):
-                k *= lhs[int(ci)]
-    return 2 * out * k
+from repro.launch.hlo_analysis import (_build_symtab, _line_collective,
+                                       build_call_graph, dot_flops_line)
 
 
 def analyze_collectives(hlo, top=15):
     """Biggest collective ops, loop-weighted."""
-    from repro.launch.hlo_analysis import (_split_computations,
-                                           _line_collective)
-    comps, mult = build_call_graph(hlo)
+    comps, _, mult = build_call_graph(hlo)
     rows = []
     for name, lines in comps.items():
         m = mult.get(name, 1)
@@ -87,10 +40,12 @@ def analyze_collectives(hlo, top=15):
 
 
 def analyze(hlo, top=15):
-    comps, mult = build_call_graph(hlo)
+    comps, _, mult = build_call_graph(hlo)
     rows = []
-    dot_total = 0
+    dot_total = 0.0
     for name, lines in comps.items():
+        symtab = _build_symtab(lines)
+        m = mult.get(name, 1)
         for line in lines:
             mo = re.search(r"%[\w.\-]+ = (?:\()?(\w+)\[([\d,]*)\]", line)
             if not mo:
@@ -101,9 +56,8 @@ def analyze(hlo, top=15):
                     out *= int(d)
             opm = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z\-]+)\(", line)
             op = opm.group(1) if opm else "?"
-            m = mult.get(name, 1)
             if " dot(" in line:
-                dot_total += dot_flops_line(line) * m
+                dot_total += dot_flops_line(line, symtab) * m
             if op in ("parameter", "get-tuple-element", "tuple", "bitcast",
                       "constant", "copy"):
                 continue
@@ -129,11 +83,16 @@ def main():
     mesh = make_production_mesh(multi_pod=args.mesh == "multi")
     cell = build_cell(args.arch, args.shape, mesh)
     with mesh:
+        # repro: allow-raw-jit — one-shot CLI compile for inspection, not a
+        # hot path; nothing caches or re-dispatches this jit.
         comp = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                        donate_argnums=cell.donate_argnums
                        ).lower(*cell.args).compile()
-    print("cost_analysis flops:", comp.cost_analysis()["flops"])
-    print("cost_analysis bytes:", comp.cost_analysis()["bytes accessed"])
+    cost = comp.cost_analysis()
+    if isinstance(cost, list):  # jax<=0.4.x CPU returns [dict]
+        cost = cost[0] if cost else {}
+    print("cost_analysis flops:", cost.get("flops"))
+    print("cost_analysis bytes:", cost.get("bytes accessed"))
     hlo = comp.as_text()
     if args.dump:
         with open(args.dump, "w") as f:

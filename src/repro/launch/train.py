@@ -30,6 +30,8 @@ from repro.train.optim import AdamWConfig, adamw_init, adamw_update
 
 
 def _train_step_factory(loss_fn, opt_cfg):
+    # repro: allow-raw-jit — the factory runs once per training run (the
+    # returned step is the loop's only jitted entry), not per step/object.
     @jax.jit
     def step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(

@@ -143,9 +143,16 @@ class ServeEngine:
             attn_fn = seq_sharded_decode_attn_fn(mesh)
         self.params = params
         self.state = self._init_state()
+        # repro: allow-raw-jit — per-engine jits are deliberate here: the
+        # step closes over per-engine static geometry (prompt_cap, attn_fn)
+        # and one engine serves the whole process; the zero-recompile
+        # contract is enforced at runtime instead (step_cache_size()==1,
+        # asserted by tests and the repro.analysis serve contract).
         self._step = jax.jit(_build_step(cfg, self.prompt_cap, attn_fn),
                              donate_argnums=(1,))
+        # repro: allow-raw-jit — same per-engine cache argument as _step.
         self._admit_fn = jax.jit(_admit_update, donate_argnums=(0,))
+        # repro: allow-raw-jit — same per-engine cache argument as _step.
         self._deactivate_fn = jax.jit(_deactivate_update,
                                       donate_argnums=(0,))
 

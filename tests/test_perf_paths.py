@@ -105,52 +105,55 @@ def test_packed_convert_runs_one_global_sort():
     assert len(packed.splitlines()) < len(two.splitlines())
 
 
-# Every while loop in a compiled convert is accounted for: the Reshaping
-# pointer build runs ONE rank search (fori_loop → while), the chunked
-# path's chunk sorter runs one lax.scan over digit passes per global sort,
-# and each merge rung of fan-in k runs k(k-1) cross-run + k slot rank
-# searches (the 2-way rung specializes to 2: pos_a + slot ranks). The
-# global_radix path unrolls its digit passes and searches with static
-# rounds — no whiles beyond the pointer build.
-_POINTER_WHILES = 1
-
-
-def _ladder_whiles(sort_passes: int, fan_ins: list[int]) -> int:
-    return sort_passes * (1 + sum(2 if k == 2 else k * k
-                                  for k in fan_ins))
+# The while-op budgets are no longer hand-derived here: the contract
+# registry (repro.analysis.contracts) computes them from the cost model
+# (costmodel.convert_while_count — pointer build + per-sort chunk scan +
+# Σ k² rank searches over the merge_round_fan_ins rungs), and the tests
+# below evaluate the compiled program against that registry exactly the
+# way `python -m repro.analysis --hlo` does.
+def _convert_contract_violations(cfg, w):
+    from repro.analysis.checker import evaluate_hlo
+    from repro.analysis.contracts import (Case, convert_expectation,
+                                          convert_structure)
+    from repro.core.costmodel import resolve_sort_strategy
+    strategy = resolve_sort_strategy(cfg, w)
+    case = Case(contract="convert", label=cfg.key, cfg=cfg, workload=w,
+                strategy=strategy,
+                structure=convert_structure(cfg, w, strategy),
+                expect=convert_expectation(cfg, w, strategy))
+    return evaluate_hlo(_convert_hlo(cfg), case)
 
 
 def test_global_radix_convert_hlo_has_zero_merge_rounds():
     """The jitted global_radix convert contains ZERO merge rounds: the only
-    while op in the program is the pointer-build rank search. A merge rung
-    sneaking back in would add fan_in² while loops."""
-    from repro.core import EngineConfig
-    from repro.launch.hlo_analysis import op_counts
-    ops = op_counts(_convert_hlo(
-        EngineConfig(w_upe=256, sort_strategy="global_radix")))
-    assert ops.get("while", 0) == _POINTER_WHILES, ops
-    scatters = {k: v for k, v in ops.items() if "scatter" in k}
-    assert not scatters, scatters
+    while op in the program is the pointer-build rank search (the registry
+    expectation prices exactly convert_while_count == 1), and it stays
+    scatter- and native-sort-free."""
+    from repro.core import EngineConfig, Workload
+    from repro.core.costmodel import convert_while_count
+    cfg = EngineConfig(w_upe=256, sort_strategy="global_radix")
+    w = Workload(n=200, e=2048)  # _convert_hlo's graph: 2048-capacity
+    assert convert_while_count(cfg, w, "global_radix") == 1
+    vios = _convert_contract_violations(cfg, w)
+    assert not vios, "\n".join(str(v) for v in vios)
 
 
 @pytest.mark.parametrize("fan_in", [2, 4])
 def test_chunked_ladder_round_count_matches_costmodel(fan_in):
     """The compiled merge ladder has exactly the round structure
-    ``costmodel.merge_round_count`` prices: while-op census equals
-    pointer + per-sort chunk scan + Σ k² rank searches over the rungs of
-    ``merge_round_fan_ins``."""
+    ``costmodel.merge_round_count`` prices: the registry expectation's
+    while census is pointer + per-sort chunk scan + Σ k² rank searches
+    over the rungs of ``merge_round_fan_ins``."""
     from repro.core import EngineConfig, Workload, merge_round_count
     from repro.core.ordering import merge_round_fan_ins
-    from repro.launch.hlo_analysis import op_counts
     cfg = EngineConfig(w_upe=256, sort_strategy="chunked_merge",
                        merge_fan_in=fan_in)
     w = Workload(n=200, e=2048)  # _convert_hlo's graph: 2048-capacity
     fans = merge_round_fan_ins(2048, 256, fan_in)
     assert merge_round_count(cfg, w, "chunked_merge") == len(fans)
     assert merge_round_count(cfg, w, "global_radix") == 0
-    ops = op_counts(_convert_hlo(cfg))
-    want = _POINTER_WHILES + _ladder_whiles(1, fans)  # packed: 1 sort pass
-    assert ops.get("while", 0) == want, (fan_in, fans, ops.get("while"))
+    vios = _convert_contract_violations(cfg, w)
+    assert not vios, (fan_in, fans, [str(v) for v in vios])
 
 
 def _bytes_accessed(jitted, *args) -> float:
