@@ -25,11 +25,22 @@ chunked path; from PR 5 they alias the auto-DISPATCHED engine path
 the packed key scheme, the VID space forces two-pass). Compare across
 PRs on ``auto_us``/strategy columns, not on the legacy names.
 
+Trajectory note (PR 7): the ``reindex_us`` phase is the SERVING-critical
+number — Ordering/Reshaping run once per graph, but the Reindexing
+primitive re-runs on every sampled subgraph, so its tail bounds
+steady-state serve throughput. PR 7 rebuilt it as a fused SCR epilogue
+(ONE shared VID sort + rank-arithmetic numbering + unrolled rename
+gathers, dispatched per ``reindex_strategy``), and the
+``subgraph_reconvert`` case times the full ``sample_subgraph`` hot path
+end-to-end per reindex strategy, recording what ``auto`` picked.
+
 ``run(smoke=True)`` (CI: ``python -m benchmarks.run convert --smoke``)
 shrinks the cases and asserts STRUCTURE instead of wall-clock: bit-equal
 CSC outputs across every strategy, one compiled program per jitted path,
-and the cost model dispatching global_radix exactly where the merge
-ladder is non-empty.
+the cost model dispatching global_radix exactly where the merge
+ladder is non-empty, and (PR 7) the auto reindex dispatch tracing the
+exact program of the strategy the model priced, with subgraphs
+bit-identical across fused/unfused/auto.
 """
 from __future__ import annotations
 
@@ -41,9 +52,14 @@ from functools import partial
 import jax
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.core import (EngineConfig, Workload, convert, convert_xla,
-                        merge_round_count, resolve_sort_strategy)
-from repro.core.costmodel import digit_pass_count
+                        merge_round_count, resolve_reindex_strategy,
+                        resolve_sort_strategy, sample_subgraph)
+from repro.core.costmodel import (digit_pass_count, reindex_query_count,
+                                  sample_edge_capacity, sample_vid_capacity)
+from repro.core.graph import next_pow2
 from repro.core.ordering import edge_ordering
 from repro.core.reindexing import build_reindex_map, reindex_edges
 from repro.core.reshaping import build_pointer_array
@@ -80,7 +96,10 @@ def _jit_convert(cfg: EngineConfig):
 def _phase_times(coo, cfg: EngineConfig, strategy: str, iters: int) -> dict:
     """Per-phase breakdown of the dispatched path: sort (Ordering),
     pointer (Reshaping), reindex (the Reindexing primitive at batch
-    scale — it runs per sampled subgraph, not per graph)."""
+    scale — it runs per sampled SUBGRAPH, not per graph, which makes
+    ``reindex_us`` the serving-critical phase). The reindex row times
+    the PR-7 fused SCR epilogue at the strategy the cost model resolves
+    for this query count (recorded as ``reindex_strategy``)."""
     sort_fn = jax.jit(partial(
         edge_ordering, chunk=min(cfg.w_upe, coo.capacity),
         radix_bits=cfg.radix_bits, map_batch=cfg.n_upe,
@@ -97,14 +116,77 @@ def _phase_times(coo, cfg: EngineConfig, strategy: str, iters: int) -> dict:
     e_src = jax.numpy.asarray(
         rng.integers(0, coo.n_nodes, 8192).astype(np.int32))
 
+    cap = int(vids.shape[0])
+    r_strat = resolve_reindex_strategy(
+        cfg, reindex_query_count(cap, int(e_dst.shape[0])), cap)
+
     @jax.jit
     def reindex_fn(vids, e_dst, e_src):
-        rmap = build_reindex_map(vids)
+        rmap = build_reindex_map(vids, vid_bound=int(coo.n_nodes),
+                                 strategy=r_strat)
         return reindex_edges(rmap, e_dst, e_src,
                              n_nodes_cap=vids.shape[0])
 
     t_reidx = time_fn(reindex_fn, vids, e_dst, e_src, iters=iters, warmup=2)
-    return {"sort_us": t_sort, "pointer_us": t_ptr, "reindex_us": t_reidx}
+    return {"sort_us": t_sort, "pointer_us": t_ptr, "reindex_us": t_reidx,
+            "reindex_strategy": r_strat}
+
+
+def _subgraph_reconvert_case(smoke: bool, iters: int) -> dict:
+    """The serving hot path end-to-end: ``sample_subgraph`` re-converts a
+    fresh subgraph every step (select → reindex → sub-sort → pointers).
+    Timed per ``reindex_strategy`` so the fused SCR epilogue's win over
+    the loop-based build is measured where it matters, plus what the
+    Table-I model dispatches for ``auto``.
+
+    Smoke asserts: the auto dispatch TRACED the exact program of the
+    strategy the model priced (jaxpr equality, the same gate the sort
+    dispatch gets), and subgraphs are bit-identical across strategies.
+    """
+    coo = make_graph(4096 if smoke else 16384)
+    base = EngineConfig(w_upe=256 if smoke else 1024, n_upe=8)
+    csc = jax.block_until_ready(jax.jit(partial(convert, cfg=base))(coo))
+    fanouts, batch = (4, 3), 64
+    bn = jnp.arange(batch, dtype=jnp.int32)
+    key = jax.random.PRNGKey(0)
+    w = Workload(n=int(csc.n_nodes), e=int(csc.idx.shape[0]),
+                 l=len(fanouts), k=max(fanouts), b=batch)
+    n_cap = next_pow2(sample_vid_capacity(w))
+    r_auto = resolve_reindex_strategy(
+        base, reindex_query_count(n_cap, sample_edge_capacity(w)), n_cap)
+    row: dict = {"n_edges": int(coo.n_edges), "batch": batch,
+                 "fanouts": list(fanouts), "reindex_strategy_auto": r_auto}
+    jits, subs = {}, {}
+    for strat in ("fused", "unfused", "auto"):
+        cfg = dataclasses.replace(base, reindex_strategy=strat)
+        jits[strat] = jax.jit(partial(sample_subgraph, fanouts=fanouts,
+                                      cfg=cfg))
+        us = time_fn(jits[strat], csc, bn, key=key, iters=iters, warmup=2)
+        row[f"sample_{strat}_us"] = us
+        emit(f"subgraph_reconvert/{strat}", us, f"auto={r_auto}")
+        if smoke:
+            subs[strat] = jax.block_until_ready(jits[strat](csc, bn, key=key))
+    if smoke:
+        ref = subs["fused"]
+        for strat, sub in subs.items():
+            assert np.array_equal(np.asarray(sub.csc.ptr),
+                                  np.asarray(ref.csc.ptr)), strat
+            assert np.array_equal(np.asarray(sub.csc.idx),
+                                  np.asarray(ref.csc.idx)), strat
+            assert np.array_equal(np.asarray(sub.order),
+                                  np.asarray(ref.order)), strat
+        auto_cfg = dataclasses.replace(base, reindex_strategy="auto")
+        pinned_cfg = dataclasses.replace(base, reindex_strategy=r_auto)
+        jx_auto = str(jax.make_jaxpr(
+            partial(sample_subgraph, fanouts=fanouts, cfg=auto_cfg))(
+                csc, bn, key=key))
+        jx_pinned = str(jax.make_jaxpr(
+            partial(sample_subgraph, fanouts=fanouts, cfg=pinned_cfg))(
+                csc, bn, key=key))
+        assert jx_auto == jx_pinned, \
+            f"auto reindex dispatch traced a different program than {r_auto}"
+        emit("subgraph_reconvert/structure", 0.0, "asserts=passed")
+    return row
 
 
 def run(smoke: bool = False) -> dict:
@@ -157,6 +239,8 @@ def run(smoke: bool = False) -> dict:
         }
         if smoke:
             _assert_structure(coo, base, jits, results["cases"][label])
+    results["subgraph_reconvert"] = _subgraph_reconvert_case(
+        smoke, iters=2 if smoke else 7)
     with open(SMOKE_OUT_PATH if smoke else OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
         f.write("\n")

@@ -31,9 +31,14 @@ import dataclasses
 from repro.core.costmodel import (EngineConfig, SORT_STRATEGIES, Workload,
                                   bitstream_library, convert_while_count,
                                   merge_round_count,
+                                  pointer_reindex_strategy,
+                                  reindex_dispatch_count,
+                                  reindex_sort_op_count,
+                                  sample_edge_capacity, sample_vid_capacity,
                                   shard_collective_bytes_budget,
                                   shard_convert_while_count,
-                                  sort_op_count, sort_pass_count)
+                                  sort_op_count, sort_pass_count,
+                                  sort_while_count)
 from repro.core.graph import next_pow2
 from repro.core.ordering import supports_packed_keys
 
@@ -139,7 +144,9 @@ def convert_expectation(cfg: EngineConfig, w: Workload,
     """The census ``costmodel`` prices for this (cfg, workload, strategy):
     scatter-free always, native sorts only on xla_sort, while ops exactly
     ``convert_while_count`` (= the merge-round/digit-pass structure of
-    ``merge_round_count`` plus the pointer-build rank search)."""
+    ``merge_round_count``, plus the pointer-build rank search when — and
+    only when — ``pointer_reindex_strategy`` resolves it unfused; the
+    fused epilogue unrolls the search rounds to zero whiles)."""
     forbidden = ("scatter",)
     if strategy != "xla_sort":
         forbidden = ("scatter", "sort")
@@ -178,38 +185,47 @@ SAMPLE_FANOUTS = (2, 2)
 SAMPLE_BATCH = 8
 
 
+def _sample_case_workload() -> Workload:
+    """The graph-level workload of the registered sample cases — its
+    (l, k, b) are the Table-I sampling knobs the capacity helpers read."""
+    return Workload(n=200, e=2048, l=len(SAMPLE_FANOUTS),
+                    k=max(SAMPLE_FANOUTS), b=SAMPLE_BATCH)
+
+
 def _sample_sub_workload() -> Workload:
     """The padded subgraph ``sample_subgraph`` re-converts: capacity is the
     pow2 bucket of the sampled edge count, VID space is the node budget
-    (seeds + every frontier)."""
-    frontier = nodes = SAMPLE_BATCH
-    edges = 0
-    for k in SAMPLE_FANOUTS:
-        frontier *= k
-        nodes += frontier
-        edges += frontier
-    return Workload(n=nodes, e=next_pow2(edges))
+    (seeds + every frontier) — the exact ``costmodel.sample_vid_capacity``
+    / ``sample_edge_capacity`` arithmetic, so the contract and the model
+    price the same buffers."""
+    w = _sample_case_workload()
+    return Workload(n=sample_vid_capacity(w), e=sample_edge_capacity(w))
 
 
 def sample_expectation(cfg: EngineConfig, strategy: str) -> Expectation:
     """``sample_subgraph``'s program: Selecting + Reindexing + the sub-COO
     re-conversion. The RNG primitives lower to while loops (threefry), so
     the while census is not model-owned here; the contract pins what IS
-    priced: scatter-free relocation and the exact native-sort census — the
-    two Reindexing argsorts plus the sub-convert's sorts when (and only
-    when) the forced strategy is xla_sort."""
+    priced: scatter-free relocation and the exact native-sort census.
+
+    Reindexing rides the spine since the fused-SCR-epilogue refit: the VID
+    list is sorted by ONE shared strategy-dispatched sort (replacing the
+    old pair of private argsorts), so it contributes exactly
+    ``reindex_sort_op_count`` native sorts — 1 on the xla_sort strategy,
+    0 on the radix strategies — on top of the sub-convert's own census."""
     sub = _sample_sub_workload()
     sub_sorts = sort_op_count(cfg, sub, strategy)
+    reindex_sorts = reindex_sort_op_count(
+        cfg, _sample_case_workload().n, next_pow2(sub.n))
     return Expectation(
         forbidden_ops=("scatter",),
         required_ops=("gather",),
-        sort_count=2 + sub_sorts,
+        sort_count=reindex_sorts + sub_sorts,
     )
 
 
 def sample_cases(grid: str = "full") -> list[Case]:
-    w = Workload(n=200, e=2048, l=len(SAMPLE_FANOUTS),
-                 k=max(SAMPLE_FANOUTS), b=SAMPLE_BATCH)
+    w = _sample_case_workload()
     cases = []
     for strategy in SORT_STRATEGIES:
         cfg = EngineConfig(w_upe=256, n_upe=8, sort_strategy=strategy)
@@ -286,9 +302,12 @@ def registry_summary() -> dict:
 
 def model_self_consistency(cfg: EngineConfig, w: Workload,
                            strategy: str) -> str | None:
-    """Cross-check the census arithmetic against ``merge_round_count``
-    itself: the ladder the census counts k² rank searches over must have
-    exactly the rounds the model prices. Returns an error string or None.
+    """Cross-check the census arithmetic against the model's own terms:
+    the ladder the census counts k² rank searches over must have exactly
+    the rounds ``merge_round_count`` prices, and the convert census's
+    pointer term must be the resolved SCR-epilogue strategy's dispatch
+    structure (fused ⇒ zero loop dispatches ⇒ zero extra whiles).
+    Returns an error string or None.
     """
     from repro.core.costmodel import _merge_fan_ins
     rounds = merge_round_count(cfg, w, strategy)
@@ -299,4 +318,12 @@ def model_self_consistency(cfg: EngineConfig, w: Workload,
     if rounds != want:
         return (f"merge_round_count={rounds} but the census ladder has "
                 f"{want} rounds")
+    ptr = (convert_while_count(cfg, w, strategy)
+           - sort_while_count(cfg, w, strategy))
+    ptr_strat = pointer_reindex_strategy(cfg, w)
+    if ptr != (0 if ptr_strat == "fused" else 1):
+        return (f"convert pointer while term {ptr} inconsistent with "
+                f"resolved pointer strategy {ptr_strat!r}")
+    if reindex_dispatch_count("fused") != 0:
+        return "fused reindex epilogue must price zero loop dispatches"
     return None

@@ -28,12 +28,14 @@ from .reshaping import (build_pointer_array, build_pointer_array_serial,
                         data_reshaping, graph_convert)
 from .sampling import sample_khop, select_floyd, select_keysort, \
     select_reservoir
-from .reindexing import ReindexMap, build_reindex_map, reindex_edges
+from .reindexing import (ReindexMap, build_reindex_map, reindex_edges,
+                         reindex_serial_oracle, reindex_supports_packed)
 from .pipeline import (convert, convert_xla, gather_features, preprocess,
                        preprocess_xla_baseline, sample_subgraph)
 from .costmodel import (Calibration, EngineConfig, Workload, best_config,
                         bitstream_library, choose_config, estimate_seconds,
-                        merge_round_count, relocation_bytes,
+                        merge_round_count, pointer_reindex_strategy,
+                        relocation_bytes, resolve_reindex_strategy,
                         resolve_sort_strategy)
 from .reconfig import DynPre, Engine, autopre, statpre
 

@@ -60,6 +60,14 @@ class EngineConfig:
         search cost (an HBM-rounds-for-compute trade: the default stays 2
         on compute-bound hosts; raise it where relocation traffic
         dominates — the model prices both sides)
+    reindex_strategy: loop structure of every SCR rank-search epilogue
+        (pointer build + reindex/rename lookups) — "fused" (statically
+        unrolled search rounds: zero while ops, no per-round loop
+        dispatch, at the cost of materializing per-round intermediates),
+        "unfused" (``fori_loop`` rank searches: no materialization, one
+        loop dispatch per pass), or "auto" (priced per query count by
+        ``resolve_reindex_strategy`` — fused wins the small-query phases,
+        unfused the bulk rename passes on CPU calibration)
     """
 
     w_upe: int = DEFAULT_CHUNK
@@ -72,6 +80,7 @@ class EngineConfig:
     sort_mode: str = "auto"
     sort_strategy: str = "auto"
     merge_fan_in: int = 2
+    reindex_strategy: str = "auto"
 
     @property
     def key(self) -> str:
@@ -79,9 +88,11 @@ class EngineConfig:
         strat = ("" if self.sort_strategy == "auto"
                  else f"_{self.sort_strategy}")
         fan = "" if self.merge_fan_in == 2 else f"_k{self.merge_fan_in}"
+        ridx = ("" if self.reindex_strategy == "auto"
+                else f"_{self.reindex_strategy}")
         return (f"u{self.n_upe}x{self.w_upe}_s{self.n_scr}x{self.w_scr}"
                 f"_{self.selection}_r{self.radix_bits}{mode}{strat}{fan}"
-                f"{'_pl' if self.use_pallas else ''}")
+                f"{ridx}{'_pl' if self.use_pallas else ''}")
 
 
 # Resource budget analog of the paper's 70:30 UPE:SCR split: the product of
@@ -154,6 +165,17 @@ class Calibration:
     # radix strategies.
     xla_cmp_per_s: float = 3.5e8
     sort_dispatch_s: float = 2.0e-4
+    # SCR epilogue (reindex/pointer rank searches) strategy constants:
+    # per-trip dispatch overhead of one fori_loop rank search (the
+    # unfused path pays rounds·loop_trip_s per pass) vs the streaming
+    # throughput at which the fused path materializes its per-round
+    # intermediates (rounds·queries·4 bytes). CPU-measured; crossover at
+    # ~375 queries/pass — fused pointer builds on small graphs, unfused
+    # bulk renames. A TPU recalibration raises loop_trip_s ~50× (each
+    # trip is a device round-trip) and flips everything to fused, the
+    # same platform story as xla_cmp_per_s above.
+    loop_trip_s: float = 1.0e-7
+    unroll_bytes_per_s: float = 1.5e10
 
 
 @dataclasses.dataclass(frozen=True)
@@ -249,8 +271,14 @@ def sort_while_count(cfg: EngineConfig, w: Workload,
 def convert_while_count(cfg: EngineConfig, w: Workload,
                         strategy: str | None = None) -> int:
     """While ops in the whole compiled ``pipeline.convert``: the Ordering
-    census plus the one ``rank_in_sorted`` pointer-build fori_loop."""
-    return sort_while_count(cfg, w, strategy) + 1
+    census plus the ``rank_in_sorted`` pointer build — one fori_loop when
+    the pointer epilogue resolves unfused, ZERO when it resolves fused
+    (the search rounds unroll statically). ``pointer_reindex_strategy``
+    is the same predicate ``pipeline.convert`` dispatches with, so the
+    census tracks the program that runs: n=200 grid points build their
+    201-target pointer fused, the n=70000 point unfused."""
+    ptr = 0 if pointer_reindex_strategy(cfg, w) == "fused" else 1
+    return sort_while_count(cfg, w, strategy) + ptr
 
 
 def sort_op_count(cfg: EngineConfig, w: Workload,
@@ -286,8 +314,10 @@ def shard_sort_while_count(cfg: EngineConfig, w: Workload, n_dev: int,
 def shard_convert_while_count(cfg: EngineConfig, w: Workload, n_dev: int,
                               strategy: str | None = None) -> int:
     """While census of the compiled ``shard_convert`` (sharded Ordering +
-    the pointer-build fori_loop)."""
-    return shard_sort_while_count(cfg, w, n_dev, strategy) + 1
+    the pointer build, fused/unfused-resolved exactly like the
+    single-device census)."""
+    ptr = 0 if pointer_reindex_strategy(cfg, w) == "fused" else 1
+    return shard_sort_while_count(cfg, w, n_dev, strategy) + ptr
 
 
 def shard_collective_bytes_budget(cfg: EngineConfig, w: Workload,
@@ -332,6 +362,100 @@ def relocation_bytes(cfg: EngineConfig, w: Workload,
 
 
 SORT_STRATEGIES = ("chunked_merge", "global_radix", "xla_sort")
+REINDEX_STRATEGIES = ("fused", "unfused")
+
+
+def sample_vid_capacity(w: Workload) -> int:
+    """Collected-VID-list length of one ``sample_subgraph`` pass: the seed
+    batch plus every frontier (b · Σ_{i≤l} k^i) — the SCR epilogue's
+    sorted-stream length (Table-I Selecting arithmetic reused)."""
+    frontier = nodes = w.b
+    for _ in range(w.l):
+        frontier *= w.k
+        nodes += frontier
+    return nodes
+
+
+def sample_edge_capacity(w: Workload) -> int:
+    """Pow2 capacity of the sampled edge buffer ``sample_subgraph``
+    re-converts (b · Σ_{1≤i≤l} k^i, bucketed)."""
+    frontier, edges = w.b, 0
+    for _ in range(w.l):
+        frontier *= w.k
+        edges += frontier
+    return next_pow2(max(1, edges))
+
+
+def reindex_round_count(capacity: int) -> int:
+    """Rank-search rounds per SCR epilogue pass over a ``capacity``-long
+    sorted stream: the log₂ depth of the batched binary search (the
+    fused/unfused axis changes how the rounds lower, never how many)."""
+    return max(1, int(capacity).bit_length())
+
+
+def reindex_query_count(capacity: int, e: int) -> int:
+    """Total rank-search queries of one reindex build + edge rename: the
+    first-occurrence pass (capacity), the order compaction (capacity), and
+    the dst/src rename lookups (2·e)."""
+    return 2 * capacity + 2 * e
+
+
+def reindex_dispatch_count(strategy: str) -> int:
+    """Sequential loop dispatches the reindex epilogue issues: the fused
+    path unrolls everything (zero); unfused runs three fori_loops
+    (first-occurrence rank, order compaction, the concatenated rename)."""
+    return 0 if strategy == "fused" else 3
+
+
+def rename_gather_bytes(capacity: int, e: int) -> float:
+    """Bytes the rename lookups gather from the sorted stream + slot table
+    (Table-I amendment: one int32 pivot per query per round, plus the final
+    hit/table gathers) — the traffic term separating the strategies at
+    scale."""
+    return 4.0 * (reindex_round_count(capacity) + 2) * 2 * e
+
+
+def resolve_reindex_strategy(cfg: EngineConfig, queries: int, stream: int,
+                             cal: "Calibration | None" = None) -> str:
+    """Resolve ``reindex_strategy="auto"`` for one SCR rank-search pass of
+    ``queries`` targets over a ``stream``-long sorted array.
+
+    Per search round the unfused path pays one loop-trip dispatch
+    (``loop_trip_s``), the fused path materializes ``queries`` int32
+    intermediates (``unroll_bytes_per_s``) — so fused wins exactly the
+    small-query phases (CPU crossover ≈ 375 queries: the n=200 pointer
+    build fuses, the 70k-target one doesn't, and the bulk subgraph rename
+    stays unfused until a TPU recalibration raises ``loop_trip_s``). The
+    SAME predicate ``pipeline.convert``/``sample_subgraph`` dispatch with,
+    so the model prices the program that runs.
+    """
+    if cfg.reindex_strategy != "auto":
+        return cfg.reindex_strategy
+    cal = cal or Calibration()
+    rounds = reindex_round_count(stream)
+    t_fused = rounds * queries * 4.0 / cal.unroll_bytes_per_s
+    t_unfused = rounds * cal.loop_trip_s
+    return "fused" if t_fused <= t_unfused else "unfused"
+
+
+def pointer_reindex_strategy(cfg: EngineConfig, w: Workload,
+                             cal: "Calibration | None" = None) -> str:
+    """The convert pointer build's resolved epilogue strategy: n+1 pointer
+    targets ranked over the pow2 sorted-dst stream."""
+    return resolve_reindex_strategy(cfg, w.n + 1, next_pow2(w.e), cal)
+
+
+def reindex_sort_op_count(cfg: EngineConfig, vid_bound: int,
+                          capacity: int,
+                          cal: "Calibration | None" = None) -> int:
+    """Native sort ops of the ONE shared reindex sort: the VID stream sort
+    is strategy-dispatched like any Ordering (keys-only, single pass), so
+    it contributes exactly one native sort when the resolved strategy is
+    xla_sort and zero on the radix paths — the census term
+    ``analysis.contracts.sample_expectation`` prices."""
+    strat = resolve_sort_strategy(
+        cfg, Workload(n=vid_bound, e=capacity), cal)
+    return 1 if strat == "xla_sort" else 0
 
 
 def _ordering_seconds(cfg: EngineConfig, w: Workload, cal: "Calibration",
@@ -373,6 +497,35 @@ def resolve_sort_strategy(cfg: EngineConfig, w: Workload,
                key=lambda s: _ordering_seconds(cfg, w, cal, s))
 
 
+def _reindex_seconds(cfg: EngineConfig, w: Workload,
+                     cal: "Calibration") -> float:
+    """Reindexing latency (Table-I Reindexing term, epilogue-refit): ONE
+    shared strategy-dispatched sort of the collected VID list, the SCR
+    rank-search passes (comparisons at SCR throughput), the
+    head/prefix/compaction element passes, the rename gather traffic, and
+    the resolved strategy's own extra (loop trips or round
+    materialization)."""
+    cap = next_pow2(sample_vid_capacity(w))
+    e = sample_edge_capacity(w)
+    wsub = Workload(n=w.n, e=cap)
+    strat = resolve_sort_strategy(cfg, wsub, cal)
+    # _ordering_seconds prices sort_pass_count global sorts; the reindex
+    # stream sorts exactly once (packed vid<<pos key or pair mode)
+    t_sort = _ordering_seconds(cfg, wsub, cal, strat) / sort_pass_count(
+        cfg, wsub)
+    q = reindex_query_count(cap, e)
+    rounds = reindex_round_count(cap)
+    t_rank = rounds * q / cal.scr_cmps_per_s
+    t_pass = 3 * cap / cal.reidx_elems_per_s  # head flags, prefix, order
+    rstrat = resolve_reindex_strategy(cfg, q, cap, cal)
+    if rstrat == "fused":
+        t_extra = rounds * q * 4.0 / cal.unroll_bytes_per_s
+    else:
+        t_extra = reindex_dispatch_count(rstrat) * rounds * cal.loop_trip_s
+    return (t_sort + t_rank + t_pass + t_extra
+            + rename_gather_bytes(cap, e) / cal.unroll_bytes_per_s)
+
+
 def ordering_cycles(cfg: EngineConfig, w: Workload) -> float:
     m = max(1.0, math.log2(max(2.0, w.e / cfg.w_upe)) - 1)
     return sort_pass_count(cfg, w) * m * w.e / (cfg.n_upe * cfg.w_upe)
@@ -406,7 +559,7 @@ def estimate_seconds(cfg: EngineConfig, w: Workload,
     t_select = s / (cal.sel_nodes_per_s * cfg.n_upe)
     t_reshape = max(w.n / cfg.n_scr, w.e / cfg.w_scr) * (
         cfg.n_scr * cfg.w_scr / cal.scr_cmps_per_s)
-    t_reindex = (w.b * (w.k ** w.l) * (w.l + 1)) / cal.reidx_elems_per_s
+    t_reindex = _reindex_seconds(cfg, w, cal)
     return {
         "ordering": t_order,
         "selecting": t_select,
@@ -425,12 +578,16 @@ def best_config(w: Workload, library: list[EngineConfig] | None = None,
 
 def choose_config(w: Workload, library: list[EngineConfig] | None = None,
                   cal: Calibration | None = None) -> EngineConfig:
-    """``best_config`` with the strategy axis resolved: score the library
+    """``best_config`` with the strategy axes resolved: score the library
     (auto entries score as their best strategy), then pin the winning
-    ``sort_strategy`` on the returned config so the dispatched program is
-    exactly the one the model priced — the engine-service entry point.
+    ``sort_strategy`` AND the subgraph rename pass's ``reindex_strategy``
+    on the returned config so the dispatched program is exactly the one
+    the model priced — the engine-service entry point.
     """
     cal = cal or Calibration()
     best = best_config(w, library, cal)
+    cap = next_pow2(sample_vid_capacity(w))
+    q = reindex_query_count(cap, sample_edge_capacity(w))
     return dataclasses.replace(
-        best, sort_strategy=resolve_sort_strategy(best, w, cal))
+        best, sort_strategy=resolve_sort_strategy(best, w, cal),
+        reindex_strategy=resolve_reindex_strategy(best, q, cap, cal))

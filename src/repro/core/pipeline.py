@@ -16,29 +16,36 @@ import jax
 import jax.numpy as jnp
 
 from .graph import COO, CSC, SENTINEL, Subgraph, next_pow2
-from .ordering import edge_ordering, edge_ordering_xla
+from .ordering import edge_ordering, edge_ordering_xla, stable_sort_by_key
 from .reshaping import data_reshaping, build_pointer_array
 from .sampling import sample_khop
 from .reindexing import build_reindex_map, reindex_edges
-from .costmodel import EngineConfig, Workload, resolve_sort_strategy
+from .costmodel import (EngineConfig, Workload, pointer_reindex_strategy,
+                        reindex_query_count, resolve_reindex_strategy,
+                        resolve_sort_strategy)
 
 
 def kernel_fns(cfg: EngineConfig):
-    """(chunk_sort_fn, count_fn, merge_fn, digit_pass_fn) for ``cfg`` — THE
-    Pallas routing rule. ``use_pallas`` swaps in the UPE chunk-sort kernel
-    (digit width = ``cfg.radix_bits``), the SCR count kernel, the fused
-    VMEM merge kernel (ladder fan-in = ``cfg.merge_fan_in``), and the tiled
-    global-radix digit-pass kernel pair (histogram tile = ``cfg.w_upe``);
-    one definition shared by ``convert``, ``sample_subgraph`` and the
-    mesh-sharded engine so no path can silently drop a knob.
+    """(chunk_sort_fn, count_fn, merge_fn, digit_pass_fn, rank_fn,
+    rename_fn) for ``cfg`` — THE Pallas routing rule. ``use_pallas`` swaps
+    in the UPE chunk-sort kernel (digit width = ``cfg.radix_bits``), the
+    SCR count kernel, the fused VMEM merge kernel (ladder fan-in =
+    ``cfg.merge_fan_in``), the tiled global-radix digit-pass kernel pair
+    (histogram tile = ``cfg.w_upe``), and the fused SCR epilogue pair
+    (VMEM-resident rank search + rename lookup,
+    ``kernels/reindex_epilogue.py``); one definition shared by
+    ``convert``, ``sample_subgraph`` and the mesh-sharded engine so no
+    path can silently drop a knob.
     """
     if not cfg.use_pallas:
-        return None, None, None, None
+        return None, None, None, None, None, None
     from repro.kernels import ops as _kops
     return (_kops.make_pallas_chunk_sort_fn(cfg.radix_bits),
             _kops.pallas_count_fn,
             _kops.make_pallas_merge_fn(cfg.merge_fan_in),
-            _kops.make_pallas_digit_pass_fn(cfg.radix_bits, cfg.w_upe))
+            _kops.make_pallas_digit_pass_fn(cfg.radix_bits, cfg.w_upe),
+            _kops.pallas_rank_fn,
+            _kops.pallas_rename_fn)
 
 
 def convert(coo: COO, cfg: EngineConfig | None = None,
@@ -60,11 +67,11 @@ def convert(coo: COO, cfg: EngineConfig | None = None,
     ``count_fn``/``chunk_sort_fn`` override.
     """
     cfg = cfg or EngineConfig()
-    k_sort, k_count, merge_fn, digit_pass_fn = kernel_fns(cfg)
+    k_sort, k_count, merge_fn, digit_pass_fn, k_rank, _ = kernel_fns(cfg)
     chunk_sort_fn = chunk_sort_fn or k_sort
     count_fn = count_fn or k_count
-    strategy = resolve_sort_strategy(
-        cfg, Workload(n=coo.n_nodes, e=coo.capacity))
+    w = Workload(n=coo.n_nodes, e=coo.capacity)
+    strategy = resolve_sort_strategy(cfg, w)
     sorted_coo = edge_ordering(coo, chunk=min(cfg.w_upe, coo.capacity),
                                radix_bits=cfg.radix_bits,
                                map_batch=cfg.n_upe,
@@ -72,7 +79,11 @@ def convert(coo: COO, cfg: EngineConfig | None = None,
                                merge_fn=merge_fn, mode=cfg.sort_mode,
                                strategy=strategy, fan_in=cfg.merge_fan_in,
                                digit_pass_fn=digit_pass_fn)
-    return data_reshaping(sorted_coo, count_fn=count_fn)
+    # pointer build = SCR epilogue: fused (statically unrolled rank
+    # rounds, Pallas tiles when routed) exactly where the model prices it
+    ptr_fused = pointer_reindex_strategy(cfg, w) == "fused"
+    return data_reshaping(sorted_coo, count_fn=count_fn, unroll=ptr_fused,
+                          rank_fn=k_rank if ptr_fused else None)
 
 
 def convert_xla(coo: COO) -> CSC:
@@ -96,13 +107,37 @@ def sample_subgraph(csc: CSC, batch_nodes: jnp.ndarray,
     space is batch-sized, so (dst, src) packs into one int32 key.
     """
     cfg = cfg or EngineConfig()
-    k_sort, k_count, merge_fn, digit_pass_fn = kernel_fns(cfg)
+    (k_sort, k_count, merge_fn, digit_pass_fn, k_rank,
+     k_rename) = kernel_fns(cfg)
     chunk_sort_fn = chunk_sort_fn or k_sort
     count_fn = count_fn or k_count
     nodes, e_dst, e_src = sample_khop(
         csc, batch_nodes, fanouts, key, selection=cfg.selection)
     n_cap = nodes.shape[0]
-    rmap = build_reindex_map(nodes)
+    # Reindexing rides the spine: ONE shared strategy-dispatched sort of
+    # the collected VID list (same reduction machinery as the Ordering,
+    # resolved on the VID-stream workload), then rank-arithmetic epilogue
+    # passes whose loop structure is the cfg's reindex_strategy — fused
+    # (statically unrolled / Pallas VMEM tiles) or unfused (fori_loops),
+    # priced per query count by the Table-I model.
+    r_sort_strat = resolve_sort_strategy(
+        cfg, Workload(n=csc.n_nodes, e=next_pow2(n_cap)))
+
+    def reindex_sort_fn(k, v, bound):
+        return stable_sort_by_key(
+            k, v, bound, chunk=min(cfg.w_upe, k.shape[0]),
+            radix_bits=cfg.radix_bits, map_batch=cfg.n_upe,
+            chunk_sort_fn=chunk_sort_fn, merge_fn=merge_fn,
+            strategy=r_sort_strat, fan_in=cfg.merge_fan_in,
+            digit_pass_fn=digit_pass_fn)
+
+    r_strat = resolve_reindex_strategy(
+        cfg, reindex_query_count(n_cap, e_dst.shape[0]), n_cap)
+    r_fused = r_strat == "fused"
+    rmap = build_reindex_map(nodes, vid_bound=csc.n_nodes,
+                             strategy=r_strat, sort_fn=reindex_sort_fn,
+                             rank_fn=k_rank if r_fused else None,
+                             rename_fn=k_rename if r_fused else None)
     sub_coo_raw = reindex_edges(rmap, e_dst, e_src, n_nodes_cap=n_cap)
     # pad edge buffers to pow2 for the chunked sorter
     e_cap = next_pow2(sub_coo_raw.dst.shape[0])
@@ -119,7 +154,10 @@ def sample_subgraph(csc: CSC, batch_nodes: jnp.ndarray,
                                merge_fn=merge_fn, mode=cfg.sort_mode,
                                strategy=strategy, fan_in=cfg.merge_fan_in,
                                digit_pass_fn=digit_pass_fn)
-    sub_csc = data_reshaping(sub_sorted, count_fn=count_fn)
+    sub_ptr_fused = resolve_reindex_strategy(cfg, n_cap + 1, e_cap) == "fused"
+    sub_csc = data_reshaping(sub_sorted, count_fn=count_fn,
+                             unroll=sub_ptr_fused,
+                             rank_fn=k_rank if sub_ptr_fused else None)
     return Subgraph(csc=sub_csc, order=rmap.order, n_sub_nodes=rmap.n_unique)
 
 

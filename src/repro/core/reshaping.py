@@ -21,7 +21,8 @@ from .set_count import count_less_than
 def build_pointer_array(sorted_dst: jnp.ndarray, n_nodes: int,
                         ptr_capacity: int | None = None,
                         count_fn=None, block: int = 2048,
-                        method: str = "sorted") -> jnp.ndarray:
+                        method: str = "sorted", unroll: bool = False,
+                        rank_fn=None) -> jnp.ndarray:
     """Pointer array via set-counting.
 
     ``method="sorted"`` (default): the paper's reshaper *consumes the sorted
@@ -34,13 +35,23 @@ def build_pointer_array(sorted_dst: jnp.ndarray, n_nodes: int,
     ``method="scr"``: blocked all-pairs compare-reduce — the literal SCR
     tile formulation; correct on unsorted input too; use for small tiles or
     the Pallas kernel (``count_fn``).
+
+    ``unroll=True`` is the fused SCR epilogue: the rank search's rounds
+    unroll statically so the pointer build adds ZERO while ops to the
+    convert program (dispatched by ``costmodel.pointer_reindex_strategy``).
+    ``rank_fn(sorted, targets, side)`` swaps in the Pallas rank-epilogue
+    kernel (``kernels/reindex_epilogue.py``), which runs the same unrolled
+    search over VMEM-resident sorted tiles; it outranks ``count_fn``.
     """
     targets = jnp.arange(n_nodes + 1, dtype=jnp.int32)
-    if count_fn is not None:
+    if rank_fn is not None:
+        ptr = rank_fn(sorted_dst, targets, "left")
+    elif count_fn is not None:
         ptr = count_fn(sorted_dst, targets)
     elif method == "sorted":
         from .set_count import rank_in_sorted
-        ptr = rank_in_sorted(sorted_dst, targets, side="left")
+        ptr = rank_in_sorted(sorted_dst, targets, side="left",
+                             unroll=unroll)
     else:
         ptr = count_less_than(sorted_dst, targets, block=block)
     if ptr_capacity is not None:
@@ -75,10 +86,12 @@ def build_pointer_array_serial(sorted_dst: jnp.ndarray, n_nodes: int
 
 
 def data_reshaping(sorted_coo: COO, ptr_capacity: int | None = None,
-                   count_fn=None) -> CSC:
+                   count_fn=None, unroll: bool = False,
+                   rank_fn=None) -> CSC:
     """Sorted COO → CSC (pointer array + index array = the sorted src column)."""
     ptr = build_pointer_array(sorted_coo.dst, sorted_coo.n_nodes,
-                              ptr_capacity=ptr_capacity, count_fn=count_fn)
+                              ptr_capacity=ptr_capacity, count_fn=count_fn,
+                              unroll=unroll, rank_fn=rank_fn)
     return CSC(ptr=ptr, idx=sorted_coo.src, n_edges=sorted_coo.n_edges,
                n_nodes=sorted_coo.n_nodes)
 

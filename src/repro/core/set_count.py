@@ -95,7 +95,7 @@ def searchsorted_oracle(sorted_arr: jnp.ndarray, targets: jnp.ndarray,
 
 
 def rank_in_sorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray,
-                   side: str = "left") -> jnp.ndarray:
+                   side: str = "left", unroll: bool = False) -> jnp.ndarray:
     """Parallel batched binary search: log₂(n) rounds of compare+gather,
     every query independent (shardable over the query axis).
 
@@ -105,6 +105,13 @@ def rank_in_sorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray,
     both observed on the Reddit-scale convert dry-run (§Perf convert iters
     1 & 4). This is iterated set-counting: each round one comparator per
     query against a gathered pivot.
+
+    ``unroll=True`` emits the rounds statically instead of as a
+    ``fori_loop`` — the compiled program has ZERO while ops (the "fused"
+    reindex/pointer epilogue: no loop dispatch between rounds, at the cost
+    of materializing per-round intermediates). Both variants carry the
+    ``active`` freeze guard, so results are bit-identical; the cost model
+    (``costmodel.resolve_reindex_strategy``) prices the trade.
     """
     n = sorted_arr.shape[0]
     steps = max(1, int(n).bit_length())  # search range is n+1 wide
@@ -122,5 +129,11 @@ def rank_in_sorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray,
         hi = jnp.where(active & ~go_right, mid, hi)
         return lo, hi
 
-    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    if unroll:
+        lohi = (lo, hi)
+        for _ in range(steps):  # static rounds — no while op in the HLO
+            lohi = body(0, lohi)
+        lo, _ = lohi
+    else:
+        lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
     return lo.astype(jnp.int32)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.costmodel import (EngineConfig, Workload,
+                                  pointer_reindex_strategy,
                                   resolve_sort_strategy)
 from repro.core.graph import COO, CSC, SENTINEL, Subgraph
 from repro.core.ordering import (_bits_for, _chunk_sort,
@@ -166,7 +167,7 @@ def shard_edge_ordering(mesh: Mesh, coo: COO,
         ([0, 0, 1, 1], [0, 1, 0, 1])
     """
     cfg = cfg or EngineConfig()
-    chunk_sort_fn, _, merge_fn, digit_pass_fn = _kernel_fns(cfg)
+    chunk_sort_fn, _, merge_fn, digit_pass_fn, _, _ = _kernel_fns(cfg)
     strategy = resolve_sort_strategy(
         cfg, Workload(n=coo.n_nodes, e=coo.capacity))
 
@@ -183,11 +184,15 @@ def shard_edge_ordering(mesh: Mesh, coo: COO,
 
 
 def shard_pointer_array(mesh: Mesh, sorted_dst: jnp.ndarray,
-                        n_nodes: int, count_fn=None) -> jnp.ndarray:
+                        n_nodes: int, count_fn=None, unroll: bool = False,
+                        rank_fn=None) -> jnp.ndarray:
     """Sharded Reshaping: ptr[v] = rank of v in the sorted dst stream, the
     target range tiled over devices (each shard one SCR tile row-block).
-    ``count_fn`` swaps in the Pallas SCR kernel (same contract as
-    ``core.reshaping.build_pointer_array``).
+    ``count_fn`` swaps in the Pallas SCR kernel; ``rank_fn`` the fused
+    rank-epilogue kernel and ``unroll=True`` the statically-unrolled jnp
+    search (same fused/unfused contract as
+    ``core.reshaping.build_pointer_array`` — the per-shard tile runs it
+    over its target block).
 
     Example::
 
@@ -199,18 +204,18 @@ def shard_pointer_array(mesh: Mesh, sorted_dst: jnp.ndarray,
     """
     dp, nd = _dp(mesh)
     targets = jnp.arange(n_nodes + 1, dtype=jnp.int32)
-    if nd <= 1:
-        if count_fn is not None:
-            return count_fn(sorted_dst, targets)
-        return rank_in_sorted(sorted_dst, targets, side="left")
-    pad = (-(n_nodes + 1)) % nd
-    t_pad = jnp.pad(targets, (0, pad), constant_values=n_nodes)
 
     def tile(dst_full, t_l):
+        if rank_fn is not None:
+            return rank_fn(dst_full, t_l, "left")
         if count_fn is not None:
             return count_fn(dst_full, t_l)
-        return rank_in_sorted(dst_full, t_l, side="left")
+        return rank_in_sorted(dst_full, t_l, side="left", unroll=unroll)
 
+    if nd <= 1:
+        return tile(sorted_dst, targets)
+    pad = (-(n_nodes + 1)) % nd
+    t_pad = jnp.pad(targets, (0, pad), constant_values=n_nodes)
     fn = shard_map(tile, mesh=mesh, in_specs=(P(), P(dp)), out_specs=P(dp),
                    check_vma=False)
     return fn(sorted_dst, t_pad)[:n_nodes + 1]
@@ -231,10 +236,13 @@ def shard_convert(mesh: Mesh, coo: COO,
         ([0, 2, 4], [0, 1, 0, 1])
     """
     cfg = cfg or EngineConfig()
-    _, count_fn, _, _ = _kernel_fns(cfg)
+    _, count_fn, _, _, rank_fn, _ = _kernel_fns(cfg)
     sorted_coo = shard_edge_ordering(mesh, coo, cfg)
+    ptr_fused = pointer_reindex_strategy(
+        cfg, Workload(n=coo.n_nodes, e=coo.capacity)) == "fused"
     ptr = shard_pointer_array(mesh, sorted_coo.dst, coo.n_nodes,
-                              count_fn=count_fn)
+                              count_fn=count_fn, unroll=ptr_fused,
+                              rank_fn=rank_fn if ptr_fused else None)
     return CSC(ptr=ptr, idx=sorted_coo.src, n_edges=coo.n_edges,
                n_nodes=coo.n_nodes)
 

@@ -12,6 +12,8 @@ from .prefix_partition import prefix_partition
 from .radix_sort import (global_digit_pass, make_pallas_chunk_sort_fn,
                          make_pallas_digit_pass_fn, pallas_chunk_sort_fn,
                          radix_sort_chunks, radix_sort_chunks_keys)
+from .reindex_epilogue import (pallas_rank_fn, pallas_rename_fn,
+                               rank_search_tiles, reindex_rename_tiles)
 from .set_count import filter_tree_lookup, pallas_count_fn, set_count_less
 from .segment_agg import segment_sum_sorted
 from .common import pad_pow2_1d
@@ -22,6 +24,8 @@ __all__ = [
     "make_pallas_chunk_sort_fn", "fused_merge_rounds", "pallas_merge_fn",
     "make_pallas_merge_fn", "global_digit_pass", "make_pallas_digit_pass_fn",
     "set_count_less", "filter_tree_lookup", "pallas_count_fn",
+    "rank_search_tiles", "reindex_rename_tiles", "pallas_rank_fn",
+    "pallas_rename_fn",
     "segment_sum_sorted", "segment_sum_padded",
 ]
 

@@ -96,13 +96,16 @@ def test_jitted_convert_hlo_has_no_scatter(mode):
 
 
 def test_packed_convert_runs_one_global_sort():
-    """Packed-key convert must not contain the second sort pass: its HLO
-    is strictly smaller than the two-pass program's (one chunk-sort +
-    merge-tree instead of two)."""
+    """Packed-key convert must not contain the second sort pass: one
+    chunk-sort + merge-tree instead of two. Counted on compiled sort ops
+    (line-count comparisons are no longer meaningful now the fused
+    pointer epilogue flattens each program differently)."""
     from repro.core import EngineConfig
+    from repro.launch.hlo_analysis import op_counts
     packed = _convert_hlo(EngineConfig(w_upe=256, sort_mode="packed"))
     two = _convert_hlo(EngineConfig(w_upe=256, sort_mode="two_pass"))
-    assert len(packed.splitlines()) < len(two.splitlines())
+    assert op_counts(packed).get("sort", 0) == 1
+    assert op_counts(two).get("sort", 0) == 2
 
 
 # The while-op budgets are no longer hand-derived here: the contract
@@ -125,15 +128,20 @@ def _convert_contract_violations(cfg, w):
 
 
 def test_global_radix_convert_hlo_has_zero_merge_rounds():
-    """The jitted global_radix convert contains ZERO merge rounds: the only
-    while op in the program is the pointer-build rank search (the registry
-    expectation prices exactly convert_while_count == 1), and it stays
-    scatter- and native-sort-free."""
-    from repro.core import EngineConfig, Workload
+    """The jitted global_radix convert contains ZERO merge rounds AND — at
+    this 201-target scale, where ``pointer_reindex_strategy`` resolves the
+    SCR epilogue fused — zero while ops outright: the pointer-build rank
+    search unrolls statically, so the registry expectation prices exactly
+    convert_while_count == 0. It stays scatter- and native-sort-free."""
+    from repro.core import EngineConfig, Workload, pointer_reindex_strategy
     from repro.core.costmodel import convert_while_count
     cfg = EngineConfig(w_upe=256, sort_strategy="global_radix")
     w = Workload(n=200, e=2048)  # _convert_hlo's graph: 2048-capacity
-    assert convert_while_count(cfg, w, "global_radix") == 1
+    assert pointer_reindex_strategy(cfg, w) == "fused"
+    assert convert_while_count(cfg, w, "global_radix") == 0
+    # past the fused crossover (~375 queries/pass) the build stays a loop
+    assert convert_while_count(
+        cfg, Workload(n=70000, e=2048), "global_radix") == 1
     vios = _convert_contract_violations(cfg, w)
     assert not vios, "\n".join(str(v) for v in vios)
 

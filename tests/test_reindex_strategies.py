@@ -1,0 +1,201 @@
+"""Fused SCR epilogue: reindex strategy equality, kernels, and dispatch.
+
+The PR-7 tentpole contract: ``build_reindex_map`` rides ONE shared
+strategy-dispatched sort and rank-arithmetic epilogues, and every
+(strategy × numbering × sorter × kernel) combination is bit-identical to
+``reindex_serial_oracle`` — so the cost-model dispatcher is free to pick
+purely on predicted latency, exactly like the sort-strategy axis.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (COO, EngineConfig, SENTINEL, Workload, convert,
+                        pointer_reindex_strategy, random_coo,
+                        resolve_reindex_strategy, sample_subgraph)
+from repro.core.ordering import stable_sort_by_key
+from repro.core.reindexing import (build_reindex_map, reindex_edges,
+                                   reindex_serial_oracle,
+                                   reindex_supports_packed)
+from repro.core.reshaping import build_pointer_array
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _vid_cases():
+    rng = np.random.default_rng(11)
+    return {
+        "random": rng.integers(0, 2048, 4096).astype(np.int32),
+        "sentinel_heavy": np.where(
+            rng.random(2048) < 0.7, SENTINEL,
+            rng.integers(0, 500, 2048)).astype(np.int32),
+        "all_duplicate": np.full(777, 13, np.int32),
+        "all_sentinel": np.full(64, SENTINEL, np.int32),
+        "nonpow2_capacity": rng.integers(0, 30, 56).astype(np.int32),
+        "single": np.array([5], np.int32),
+    }
+
+
+@pytest.mark.parametrize("strategy", ["fused", "unfused"])
+@pytest.mark.parametrize("vid_bound", [None, 2100])
+def test_first_occurrence_matches_serial_oracle(strategy, vid_bound):
+    """Every VID shape × both loop structures × packed and pair shared
+    sorts reproduce the hash-map oracle exactly (n_unique, order array,
+    lookup including misses and SENTINEL queries)."""
+    for name, vids in _vid_cases().items():
+        seen, order = reindex_serial_oracle(vids)
+        rm = build_reindex_map(jnp.array(vids), strategy=strategy,
+                               vid_bound=vid_bound)
+        assert int(rm.n_unique) == len(order), name
+        got = np.asarray(rm.order)
+        np.testing.assert_array_equal(
+            got[:len(order)], np.array(order, np.int32).reshape(-1), name)
+        assert (got[len(order):] == SENTINEL).all(), name
+        q = np.concatenate(
+            [vids[:64], np.array([SENTINEL, 99999, -1], np.int32)])
+        want = np.array(
+            [seen.get(int(v), SENTINEL) if v != SENTINEL else SENTINEL
+             for v in q], np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(rm.lookup(jnp.array(q))), want, name)
+
+
+@pytest.mark.parametrize("strategy", ["fused", "unfused"])
+def test_sorted_numbering_ranks_uniques(strategy):
+    """numbering="sorted": new VID = rank among ascending uniques."""
+    for name, vids in _vid_cases().items():
+        uniq = sorted({int(v) for v in vids if v != SENTINEL})
+        rm = build_reindex_map(jnp.array(vids), numbering="sorted",
+                               strategy=strategy, vid_bound=2100)
+        assert int(rm.n_unique) == len(uniq), name
+        got = np.asarray(rm.order)
+        np.testing.assert_array_equal(
+            got[:len(uniq)], np.array(uniq, np.int32).reshape(-1), name)
+        lk = np.asarray(rm.lookup(jnp.array(vids[:64])))
+        want = np.array(
+            [uniq.index(int(v)) if v != SENTINEL else SENTINEL
+             for v in vids[:64]], np.int32)
+        np.testing.assert_array_equal(lk, want, name)
+
+
+@pytest.mark.parametrize("sort_strategy",
+                         ["chunked_merge", "global_radix", "xla_sort"])
+def test_shared_sort_strategy_dispatch_is_bit_identical(sort_strategy):
+    """The reindex map is invariant to which reduction structure the ONE
+    shared sort runs — the same stable-sort-canonical-output argument as
+    the Ordering strategies (and the reason ``sample_subgraph`` can
+    dispatch it from the same cost model)."""
+    vids = _vid_cases()["random"]
+
+    def sort_fn(k, v, bound):
+        return stable_sort_by_key(k, v, bound,
+                                  chunk=min(256, k.shape[0]),
+                                  strategy=sort_strategy)
+
+    ref = build_reindex_map(jnp.array(vids), vid_bound=2048)
+    got = build_reindex_map(jnp.array(vids), vid_bound=2048,
+                            sort_fn=sort_fn)
+    np.testing.assert_array_equal(np.asarray(got.sorted_vids),
+                                  np.asarray(ref.sorted_vids))
+    np.testing.assert_array_equal(np.asarray(got.order),
+                                  np.asarray(ref.order))
+    np.testing.assert_array_equal(np.asarray(got.slot_to_new),
+                                  np.asarray(ref.slot_to_new))
+
+
+def test_packed_predicate_and_pair_fallback_agree():
+    """Past the packed bit budget the pair sort takes over with identical
+    results (wide-VID regime: bits(bound) + bits(cap-1) > 31)."""
+    assert reindex_supports_packed(2048, 8192)
+    assert not reindex_supports_packed(70000, 1 << 20)
+    rng = np.random.default_rng(5)
+    vids = rng.integers(0, 70000, 512).astype(np.int32)
+    wide = build_reindex_map(jnp.array(vids), vid_bound=70000)  # packs: 512 pos
+    none = build_reindex_map(jnp.array(vids), vid_bound=None)   # pair mode
+    np.testing.assert_array_equal(np.asarray(wide.order),
+                                  np.asarray(none.order))
+
+
+def test_pallas_epilogue_kernels_match_jnp_paths():
+    """The VMEM-tiled rank/rename kernels are drop-in equal to the jnp
+    fused path, for the map build AND the edge rename."""
+    from repro.kernels.ops import pallas_rank_fn, pallas_rename_fn
+    rng = np.random.default_rng(7)
+    vids = rng.integers(0, 300, 1000).astype(np.int32)
+    vids[rng.random(1000) < 0.3] = SENTINEL
+    ref = build_reindex_map(jnp.array(vids), vid_bound=300,
+                            strategy="fused")
+    ker = build_reindex_map(jnp.array(vids), vid_bound=300,
+                            strategy="fused", rank_fn=pallas_rank_fn,
+                            rename_fn=pallas_rename_fn)
+    np.testing.assert_array_equal(np.asarray(ker.order),
+                                  np.asarray(ref.order))
+    e_dst = jnp.array(rng.integers(0, 400, 256).astype(np.int32))
+    e_src = jnp.array(rng.integers(0, 400, 256).astype(np.int32))
+    a = reindex_edges(ref, e_dst, e_src, n_nodes_cap=1000)
+    b = reindex_edges(ker, e_dst, e_src, n_nodes_cap=1000)
+    np.testing.assert_array_equal(np.asarray(a.dst), np.asarray(b.dst))
+    np.testing.assert_array_equal(np.asarray(a.src), np.asarray(b.src))
+    assert int(a.n_edges) == int(b.n_edges)
+
+
+def test_pointer_build_unroll_is_bit_identical_and_dispatched():
+    """``build_pointer_array(unroll=True)`` equals the fori_loop build,
+    and the model's pointer dispatch sits exactly at the documented
+    crossover: small target counts fuse, huge ones stay unfused."""
+    rng = np.random.default_rng(9)
+    dst = np.sort(rng.integers(0, 200, 2048)).astype(np.int32)
+    a = build_pointer_array(jnp.array(dst), 200, unroll=True)
+    b = build_pointer_array(jnp.array(dst), 200, unroll=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    cfg = EngineConfig()
+    assert pointer_reindex_strategy(cfg, Workload(n=200, e=2048)) == "fused"
+    assert pointer_reindex_strategy(
+        cfg, Workload(n=70000, e=2048)) == "unfused"
+    # pinning the axis overrides the model
+    pinned = EngineConfig(reindex_strategy="unfused")
+    assert pointer_reindex_strategy(pinned, Workload(n=200, e=2048)) \
+        == "unfused"
+    # the key encodes the pinned axis (jit-cache identity), auto is silent
+    assert "unfused" in pinned.key
+    assert "fused" not in cfg.key
+
+
+def test_resolver_crossover_matches_calibration():
+    """fused ⟺ queries per pass below loop_trip_s · unroll_bytes_per_s / 4
+    (≈375 on the CPU calibration)."""
+    from repro.core.costmodel import Calibration
+    cal = Calibration()
+    crossover = cal.loop_trip_s * cal.unroll_bytes_per_s / 4.0
+    cfg = EngineConfig()
+    assert resolve_reindex_strategy(cfg, int(crossover) - 8, 2048) == "fused"
+    assert resolve_reindex_strategy(cfg, int(crossover) + 8, 2048) \
+        == "unfused"
+
+
+def test_sample_subgraph_bit_identical_across_reindex_strategies():
+    """The serving hot path: fused vs unfused vs auto produce the same
+    Subgraph bit-for-bit, on the jnp and Pallas routes."""
+    rng = np.random.default_rng(3)
+    d, s = random_coo(rng, n_nodes=200, n_edges=1500)
+    coo = COO.from_arrays(d, s, n_nodes=200, capacity=2048)
+    csc = convert(coo)
+    bn = jnp.arange(8, dtype=jnp.int32)
+    key = jax.random.PRNGKey(7)
+    subs = {}
+    for rs, pallas in [("fused", False), ("unfused", False),
+                       ("auto", False), ("fused", True)]:
+        cfg = EngineConfig(w_upe=256, reindex_strategy=rs,
+                           use_pallas=pallas)
+        subs[(rs, pallas)] = sample_subgraph(csc, bn, (2, 2), key, cfg)
+    ref = subs[("fused", False)]
+    for k, sub in subs.items():
+        np.testing.assert_array_equal(np.asarray(sub.csc.ptr),
+                                      np.asarray(ref.csc.ptr), k)
+        np.testing.assert_array_equal(np.asarray(sub.csc.idx),
+                                      np.asarray(ref.csc.idx), k)
+        np.testing.assert_array_equal(np.asarray(sub.order),
+                                      np.asarray(ref.order), k)
+        assert int(sub.n_sub_nodes) == int(ref.n_sub_nodes), k
