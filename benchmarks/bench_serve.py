@@ -1,14 +1,23 @@
-"""Serving microbench — continuous batching vs the sequential loop.
+"""Serving microbench — continuous batching vs the sequential loop, for
+BOTH clients of the slot core.
 
-Emits ``BENCH_serve.json`` (repo root): tokens/s for the same mixed-length
-request stream served (a) one request at a time through a batch-1 decode
-loop (what ``launch/serve.py`` did before ``repro.serve``) and (b) by the
-continuous batcher (``serve.ServeEngine`` — admission/prefill/decode/
-retirement in one jitted slot step), plus admission-latency percentiles
-and the compiled-program count after warmup (must stay at 1: admission
-never recompiles). CPU-host proxy numbers — the batched-vs-sequential
-contrast is schedule-level (weight reads amortized over slots) and
-survives the TPU port.
+Emits ``BENCH_serve.json`` (repo root) with two cases:
+
+* ``lm`` — tokens/s for the same mixed-length request stream served (a)
+  one request at a time through a batch-1 decode loop (what
+  ``launch/serve.py`` did before ``repro.serve``) and (b) by the
+  continuous batcher (``serve.ServeEngine`` — admission/prefill/decode/
+  retirement in one jitted slot step), plus admission-latency percentiles.
+* ``gnn_serve`` — predictions/s for a mixed seed-count inference stream
+  served (a) by a batch-1 jitted sample→``sample_subgraph``→forward loop
+  and (b) by ``serve.GnnServeEngine`` (every occupied slot's whole
+  request as one vmap lane of one step); the batched predictions are
+  asserted bit-identical to the sequential loop's.
+
+Both cases record the compiled-program count after warmup (must stay at
+1: admission never recompiles). CPU-host proxy numbers — the contrast is
+schedule-level (weight/graph reads amortized over slots) and survives the
+TPU port.
 
     PYTHONPATH=src python benchmarks/bench_serve.py --smoke
 """
@@ -24,8 +33,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.graphsage_reddit import smoke_config
+from repro.core import pipeline
+from repro.core.graph import COO, SENTINEL, random_coo
+from repro.models.gnn import gnn_init
 from repro.models.transformer import lm_decode_step, lm_init, make_cache
-from repro.serve import ServeEngine
+from repro.serve import GnnServeEngine, ServeEngine
 
 try:
     from .common import emit
@@ -110,7 +123,7 @@ def run_batched(cfg, params, reqs, *, n_slots: int, max_len: int,
     }
 
 
-def _drain(eng: ServeEngine) -> list:
+def _drain(eng) -> list:
     """Run the engine loop over the currently queued requests, then reopen
     the stream so warmup and the timed run share one engine (and
     therefore one jit cache)."""
@@ -120,7 +133,7 @@ def _drain(eng: ServeEngine) -> list:
     return out
 
 
-def run(smoke: bool = True) -> dict:
+def run_lm(smoke: bool = True) -> dict:
     n = 12 if smoke else 32
     n_slots = 4 if smoke else 8
     prompt_cap, gen_cap = 16, 12
@@ -145,7 +158,7 @@ def run(smoke: bool = True) -> dict:
     emit("serve/recompiles_after_warmup",
          batched["recompiles_after_warmup"], "must be 0")
 
-    results = {
+    return {
         "arch": ARCH,
         "workload": {"n_requests": n, "n_slots": n_slots,
                      "prompt_cap": prompt_cap, "gen_cap": gen_cap,
@@ -158,6 +171,113 @@ def run(smoke: bool = True) -> dict:
         "recompiles_after_warmup": batched["recompiles_after_warmup"],
         "admission_ms": batched["admission_ms"],
     }
+
+
+# ---------------------------------------------------------------------------
+# GNN serving: batched inference vs the batch-1 sample→convert→forward loop
+# ---------------------------------------------------------------------------
+GNN_NODES = 512
+GNN_FEAT = 16
+
+
+def make_gnn_requests(n: int, n_nodes: int, seed_cap: int,
+                      seed: int = 0) -> list[list[int]]:
+    """Mixed seed-count inference stream (1..seed_cap nodes/request)."""
+    rng = np.random.default_rng(seed)
+    return [rng.choice(n_nodes, int(rng.integers(1, seed_cap + 1)),
+                       replace=False).tolist() for _ in range(n)]
+
+
+def _make_gnn_engine(n_slots: int, seed_cap: int) -> GnnServeEngine:
+    rng = np.random.default_rng(0)
+    dst, src = random_coo(rng, GNN_NODES, 3000)
+    csc = pipeline.convert(COO.from_arrays(dst, src, GNN_NODES,
+                                           capacity=4096))
+    gcfg = smoke_config()
+    feats = jnp.asarray(rng.normal(size=(GNN_NODES, GNN_FEAT))
+                        .astype(np.float32))
+    params = gnn_init(gcfg, jax.random.PRNGKey(1), d_in=GNN_FEAT,
+                      n_classes=8)
+    return GnnServeEngine(gcfg, params, csc, feats, n_slots=n_slots,
+                          seed_cap=seed_cap)
+
+
+def run_gnn_sequential(eng: GnnServeEngine, reqs, rids) -> tuple[list, float]:
+    """The pre-batcher inference loop: one jitted batch-1
+    sample→``sample_subgraph``→forward dispatch per request, using the same
+    per-request keys as the engine (``request_key(rid)``) — so its outputs
+    double as the bit-equality oracle for the batched run."""
+    # repro: allow-raw-jit — batch-1 oracle of the engine's own slot_fn;
+    # one compile, reused across the stream.
+    fn = jax.jit(eng.slot_fn)
+    row = np.full((eng.seed_cap,), int(SENTINEL), np.int32)
+    row[:len(reqs[0])] = reqs[0]
+    jax.block_until_ready(fn(eng.params, jnp.asarray(row),
+                             eng.request_key(rids[0])))  # warmup compile
+    outs = []
+    t0 = time.perf_counter()
+    for rid, seeds in zip(rids, reqs):
+        row = np.full((eng.seed_cap,), int(SENTINEL), np.int32)
+        row[:len(seeds)] = seeds
+        preds = fn(eng.params, jnp.asarray(row), eng.request_key(rid))
+        outs.append(np.asarray(preds)[:len(seeds)].tolist())
+    return outs, time.perf_counter() - t0
+
+
+def run_gnn(smoke: bool = True) -> dict:
+    n = 24 if smoke else 64
+    n_slots = 4 if smoke else 8
+    seed_cap = 8
+    eng = _make_gnn_engine(n_slots, seed_cap)
+    reqs = make_gnn_requests(n, GNN_NODES, seed_cap)
+
+    # warmup: compile step/admit on two throwaway requests
+    for seeds in reqs[:2]:
+        eng.submit(seeds)
+    assert len(_drain(eng)) == 2
+    compiled_after_warmup = eng.step_cache_size()
+
+    t0 = time.perf_counter()
+    handles = [eng.submit(seeds) for seeds in reqs]
+    completed = _drain(eng)
+    bat_dt = time.perf_counter() - t0
+    assert len(completed) == n
+    recompiles = eng.step_cache_size() - compiled_after_warmup
+
+    want, seq_dt = run_gnn_sequential(eng, reqs,
+                                      [h.rid for h in handles])
+    by_rid = {r.rid: r.tokens_out for r in completed}
+    for h, preds in zip(handles, want):
+        assert by_rid[h.rid] == preds, (
+            f"batched predictions diverge from the sequential loop "
+            f"(rid={h.rid})")
+
+    n_preds = sum(len(s) for s in reqs)
+    seq_pps, bat_pps = n_preds / seq_dt, n_preds / bat_dt
+    speedup = bat_pps / seq_pps
+    emit("gnn_serve/sequential_pred_s", seq_pps, f"n={n}")
+    emit("gnn_serve/batched_pred_s", bat_pps,
+         f"n={n},slots={n_slots},steps={eng.stats.steps}")
+    emit("gnn_serve/speedup_batched_vs_sequential", speedup, f"n={n}")
+    emit("gnn_serve/recompiles_after_warmup", recompiles, "must be 0")
+    emit("gnn_serve/bit_identical_to_sequential", 1, "asserted")
+
+    return {
+        "workload": {"n_requests": n, "n_slots": n_slots,
+                     "seed_cap": seed_cap, "n_nodes": GNN_NODES,
+                     "fanouts": list(smoke_config().sample_sizes)},
+        "sequential_pred_s": seq_pps,
+        "batched_pred_s": bat_pps,
+        "speedup_batched_vs_sequential": speedup,
+        "steps": eng.stats.steps,
+        "compiled_programs": eng.step_cache_size(),
+        "recompiles_after_warmup": recompiles,
+        "bit_identical_to_sequential": True,
+    }
+
+
+def run(smoke: bool = True) -> dict:
+    results = {"lm": run_lm(smoke), "gnn_serve": run_gnn(smoke)}
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
         f.write("\n")
@@ -171,6 +291,12 @@ if __name__ == "__main__":
     jax.config.update("jax_platform_name", "cpu")
     print("name,us_per_call,derived")
     r = run(smoke=args.smoke)
-    print(f"continuous batching: {r['speedup_batched_vs_sequential']:.2f}x "
-          f"sequential ({r['batched_tok_s']:.1f} vs "
-          f"{r['sequential_tok_s']:.1f} tok/s)")
+    print(f"continuous batching: "
+          f"{r['lm']['speedup_batched_vs_sequential']:.2f}x sequential "
+          f"({r['lm']['batched_tok_s']:.1f} vs "
+          f"{r['lm']['sequential_tok_s']:.1f} tok/s)")
+    print(f"gnn serving: "
+          f"{r['gnn_serve']['speedup_batched_vs_sequential']:.2f}x "
+          f"sequential ({r['gnn_serve']['batched_pred_s']:.1f} vs "
+          f"{r['gnn_serve']['sequential_pred_s']:.1f} pred/s, "
+          f"bit-identical)")

@@ -259,17 +259,64 @@ def check_serve(grid: str = "full", progress=None) -> Report:
     return rep
 
 
+def _gnn_serve_engine(cfg):
+    """A smoke GnnServeEngine on the contract workload's graph — shared by
+    the lowering probe (per sort strategy) and the runtime cache guard."""
+    from repro.configs.graphsage_reddit import smoke_config
+    from repro.models.gnn import gnn_init
+    from repro.serve.gnn import GnnServeEngine
+    w = contracts._gnn_serve_workload()
+    csc = pipeline.convert(_make_coo(w))
+    gcfg = smoke_config()
+    rng = np.random.default_rng(1)
+    feats = jnp.asarray(rng.normal(size=(w.n, 8)).astype(np.float32))
+    params = gnn_init(gcfg, jax.random.PRNGKey(0), d_in=8, n_classes=5)
+    return GnnServeEngine(gcfg, params, csc, feats,
+                          fanouts=contracts.GNN_SERVE_FANOUTS, n_slots=2,
+                          seed_cap=contracts.GNN_SERVE_SEED_CAP, cfg=cfg)
+
+
+def _lower_gnn_serve(case: Case) -> str:
+    eng = _gnn_serve_engine(case.cfg)
+    return eng._step.lower(eng.params, eng.state).compile().as_text()
+
+
+def check_gnn_serve(grid: str = "full", progress=None) -> Report:
+    """Lower the GNN serving step once per sort strategy and check the
+    scatter-free / sort-census contract, then run two heterogeneous
+    inference requests end-to-end and assert zero recompiles — the same
+    two-leg shape as the LM serve contract."""
+    cases = contracts.gnn_serve_cases(grid)
+    rep = _check_grouped(cases, _lower_gnn_serve, progress)
+    if progress:
+        progress("running gnn_serve recompile guard (2 requests)")
+    eng = _gnn_serve_engine(None)
+    eng.submit([1, 2, 3])
+    eng.submit([4, 5])
+    eng.close_submissions()
+    eng.run()
+    rep.checks += 1
+    size = eng.step_cache_size()
+    if size != 1:
+        rep.violations.append(Violation(
+            "gnn_serve", cases[0].label, "cache-size",
+            f"step_cache_size()={size} after heterogeneous traffic "
+            f"(expected exactly 1 compiled step)"))
+    return rep
+
+
 CONTRACT_CHECKS = {
     "convert": check_convert,
     "sample": check_sample,
     "shard": check_shard,
     "serve": check_serve,
+    "gnn_serve": check_gnn_serve,
 }
 
 
 def check_all(grid: str = "full",
               parts: tuple[str, ...] = ("convert", "sample", "shard",
-                                        "serve"),
+                                        "serve", "gnn_serve"),
               progress=None) -> Report:
     """Run every registered contract; ``grid="smoke"`` shrinks the convert
     sweep to the smoke configs/workload (used by the test suite — CI's

@@ -238,6 +238,60 @@ def sample_cases(grid: str = "full") -> list[Case]:
     return cases
 
 
+GNN_SERVE_FANOUTS = (3, 2)  # = configs.graphsage_reddit smoke sample_sizes
+GNN_SERVE_SEED_CAP = 8
+
+
+def _gnn_serve_workload() -> Workload:
+    """One slot lane of the GNN serving step, as a Table-I workload: the
+    seed-row capacity is the sampling batch, the fan-outs give (l, k)."""
+    return Workload(n=200, e=2048, l=len(GNN_SERVE_FANOUTS),
+                    k=max(GNN_SERVE_FANOUTS), b=GNN_SERVE_SEED_CAP)
+
+
+def _gnn_serve_sub_workload() -> Workload:
+    """The padded per-lane subgraph the slot re-converts — the same
+    ``sample_vid_capacity``/``sample_edge_capacity`` arithmetic as the
+    sample contract, so both price the same buffers."""
+    w = _gnn_serve_workload()
+    return Workload(n=sample_vid_capacity(w), e=sample_edge_capacity(w))
+
+
+def gnn_serve_expectation(cfg: EngineConfig, strategy: str) -> Expectation:
+    """The ``GnnServeEngine`` step: every occupied slot's whole
+    sample → reindex/re-convert → feature gather → forward → argmax as vmap
+    lanes of ONE program. vmap batches ops instead of replicating them, so
+    the step's native-sort census equals ONE lane's — exactly the sample
+    contract's ``reindex_sort_op_count + sort_op_count`` arithmetic — and
+    the forward must ride the pointer-based segment reduction (cumsum +
+    boundary gathers), never ``scatter``: a ``jax.ops.segment_sum`` in the
+    batched forward would lower to scatter and fail here. RNG threefry
+    whiles are unasserted, as in the sample contract."""
+    sub = _gnn_serve_sub_workload()
+    return Expectation(
+        forbidden_ops=("scatter",),
+        required_ops=("gather",),
+        sort_count=(reindex_sort_op_count(cfg, _gnn_serve_workload().n,
+                                          next_pow2(sub.n))
+                    + sort_op_count(cfg, sub, strategy)),
+    )
+
+
+def gnn_serve_cases(grid: str = "full") -> list[Case]:
+    w = _gnn_serve_workload()
+    cases = []
+    for strategy in SORT_STRATEGIES:
+        cfg = EngineConfig(w_upe=256, n_upe=8, sort_strategy=strategy)
+        cases.append(Case(
+            contract="gnn_serve",
+            label=(f"{cfg.key} fanouts={GNN_SERVE_FANOUTS} "
+                   f"cap={GNN_SERVE_SEED_CAP}"),
+            cfg=cfg, workload=w, strategy=strategy,
+            structure=("gnn_serve", strategy),
+            expect=gnn_serve_expectation(cfg, strategy)))
+    return cases
+
+
 def shard_expectation(cfg: EngineConfig, w: Workload, n_dev: int,
                       strategy: str) -> Expectation:
     """The sharded convert: scatter-free, while census from
@@ -291,7 +345,7 @@ def registry_summary() -> dict:
     """Contract registry overview (docs + ``--json`` report header)."""
     convert = convert_cases("full")
     return {
-        "contracts": ["convert", "sample", "shard", "serve"],
+        "contracts": ["convert", "sample", "shard", "serve", "gnn_serve"],
         "convert_cases": len(convert),
         "convert_groups": len({c.structure for c in convert}),
         "workloads": [dataclasses.asdict(w) for w in CONVERT_WORKLOADS],

@@ -161,6 +161,30 @@ def sample_subgraph(csc: CSC, batch_nodes: jnp.ndarray,
     return Subgraph(csc=sub_csc, order=rmap.order, n_sub_nodes=rmap.n_unique)
 
 
+def sample_subgraph_batched(csc: CSC, batch_nodes: jnp.ndarray,
+                            fanouts: tuple[int, ...], keys: jax.Array,
+                            cfg: EngineConfig | None = None) -> Subgraph:
+    """Slot-batched sampling: one :func:`sample_subgraph` lane per row.
+
+    ``batch_nodes`` is [S, B] seed rows (SENTINEL-padded to a shared pow2
+    bucket), ``keys`` is [S] per-row PRNG keys; the result is a
+    ``Subgraph`` whose every leaf carries a leading [S] axis. Each lane
+    runs the exact single-request program — same reindex_strategy
+    dispatch, same RNG draws for its (seeds, key) — so lane ``i`` of the
+    batched output is bit-identical to ``sample_subgraph(csc,
+    batch_nodes[i], fanouts, keys[i], cfg)``, independent of what the
+    other lanes sample. That independence is what lets the serve engine
+    batch concurrent requests without admission order leaking into
+    results (asserted in tests/test_gnn_serve.py).
+    """
+    cfg = cfg or EngineConfig()
+
+    def one_row(bn, key):
+        return sample_subgraph(csc, bn, fanouts, key, cfg)
+
+    return jax.vmap(one_row)(batch_nodes, keys)
+
+
 @partial(jax.jit, static_argnames=("fanouts", "cfg"))
 def preprocess(coo: COO, batch_nodes: jnp.ndarray, fanouts: tuple[int, ...],
                key: jax.Array, cfg: EngineConfig = EngineConfig()

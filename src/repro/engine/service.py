@@ -42,6 +42,8 @@ from repro.core.reconfig import (RECONFIG_S_PARTIAL, ReconfigDecision,
 preprocess_jit = pipeline.preprocess
 sample_jit = jax.jit(pipeline.sample_subgraph, static_argnames=("fanouts",
                                                                 "cfg"))
+sample_batched_jit = jax.jit(pipeline.sample_subgraph_batched,
+                             static_argnames=("fanouts", "cfg"))
 convert_jit = jax.jit(pipeline.convert, static_argnames=("cfg",))
 
 
@@ -83,6 +85,46 @@ def bucket_coo(coo: COO) -> COO:
     return COO(dst=pad_to(coo.dst, cap, SENTINEL),
                src=pad_to(coo.src, cap, SENTINEL),
                n_edges=coo.n_edges, n_nodes=coo.n_nodes)
+
+
+def sample_batched_cache_size() -> int:
+    """Compiled-program count behind the module-level batched-sample entry
+    (serve-side zero-recompile guards assert against it).
+
+    Example::
+
+        >>> isinstance(sample_batched_cache_size(), int)
+        True
+    """
+    try:
+        return int(sample_batched_jit._cache_size())
+    except AttributeError as e:  # private PjitFunction API (jax upgrade?)
+        raise NotImplementedError(
+            "jax.jit cache introspection (_cache_size) is unavailable on "
+            "this JAX version — update sample_batched_cache_size() to the "
+            "new API") from e
+
+
+def bucket_seed_rows(seed_rows: jnp.ndarray) -> jnp.ndarray:
+    """Pad [S, B] seed rows to the pow2 per-row bucket with SENTINEL (the
+    same invariant as :func:`bucket_batch`, applied per slot row: padding
+    seeds have degree 0 and never claim new VIDs).
+
+    Example::
+
+        >>> import jax.numpy as jnp
+        >>> rows = bucket_seed_rows(jnp.zeros((2, 3), jnp.int32))
+        >>> rows.shape
+        (2, 4)
+        >>> b = jnp.zeros((2, 4), jnp.int32)
+        >>> bucket_seed_rows(b) is b  # already-pow2 rows pass through
+        True
+    """
+    cap = next_pow2(seed_rows.shape[1])
+    if cap == seed_rows.shape[1]:
+        return seed_rows
+    return jnp.pad(seed_rows, ((0, 0), (0, cap - seed_rows.shape[1])),
+                   constant_values=int(SENTINEL))
 
 
 def bucket_batch(batch_nodes: jnp.ndarray) -> jnp.ndarray:
@@ -254,6 +296,51 @@ class PreprocService:
             return jit_shard_preprocess(self.mesh)(
                 coo_b, bn_b, fanouts=self.fanouts, key=key, cfg=cfg)
         return preprocess_jit(coo_b, bn_b, self.fanouts, key, cfg)
+
+    def sample_batched(self, csc, seed_rows: jnp.ndarray, keys: jax.Array,
+                       cfg: EngineConfig | None = None):
+        """Slot-batched sampling dispatch: bucket, select, dispatch.
+
+        The serve-side sibling of :meth:`preprocess`: ``seed_rows`` [S, B]
+        is per-row SENTINEL-padded to its pow2 bucket, the configuration
+        is pinned (``cfg``) or DynPre-selected on the sampling workload,
+        and the dispatch is accounted under the ``(EngineConfig.key,
+        (S, B_bucket))`` key — re-dispatching an already-seen pair hits
+        the one module-level :data:`sample_batched_jit` cache.
+
+        Example::
+
+            >>> import jax, jax.numpy as jnp, numpy as np
+            >>> from repro.core import pipeline
+            >>> from repro.core.graph import COO, random_coo
+            >>> rng = np.random.default_rng(0)
+            >>> dst, src = random_coo(rng, 64, 200)
+            >>> coo = COO.from_arrays(dst, src, 64, capacity=256)
+            >>> csc = pipeline.convert(coo)
+            >>> svc = PreprocService(fanouts=(2, 2))
+            >>> rows = jnp.arange(6, dtype=jnp.int32).reshape(2, 3)
+            >>> keys = jax.random.split(jax.random.PRNGKey(0), 2)
+            >>> sub = svc.sample_batched(csc, rows, keys)
+            >>> sub.order.shape[0]  # leading slot axis
+            2
+            >>> svc.stats.n_unique_keys
+            1
+        """
+        rows = bucket_seed_rows(jnp.asarray(seed_rows, jnp.int32))
+        if cfg is None:
+            w = Workload(n=csc.n_nodes, e=int(csc.idx.shape[0]),
+                         l=len(self.fanouts), k=max(self.fanouts),
+                         b=int(rows.shape[1]))
+            d = self.decide(w)
+            if d.reconfigure or self.active_cfg is None:
+                self.active_cfg = d.config
+                self.stats.n_reconfigs += 1
+            cfg = self.active_cfg
+        bucket = (int(rows.shape[0]), int(rows.shape[1]))
+        self.stats.n_dispatches += 1
+        self._keys_seen.add((cfg.key, bucket))
+        self.stats.n_unique_keys = len(self._keys_seen)
+        return sample_batched_jit(csc, rows, self.fanouts, keys, cfg)
 
     @staticmethod
     def cache_size() -> int:

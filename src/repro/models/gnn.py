@@ -22,7 +22,16 @@ SEN = jnp.int32(0x7FFFFFFF)
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class GraphBatch:
-    """Static-shape graph minibatch (block-diagonal for batched graphs)."""
+    """Static-shape graph minibatch (block-diagonal for batched graphs).
+
+    ``ptr`` is optional: when set (the serving path builds it from the
+    sampled subgraph's CSC), segment reductions run scatter-free over the
+    pointer array instead of through ``jax.ops.segment_sum`` — a
+    requirement of the ``gnn_serve`` HLO contract. It requires
+    ``edge_dst`` sorted ascending with ``ptr[d] .. ptr[d+1]`` spanning
+    node ``d``'s incoming edges, which is exactly the layout
+    ``pipeline.sample_subgraph`` emits.
+    """
 
     edge_dst: jnp.ndarray  # [E] int32, sorted ascending, SENTINEL pad
     edge_src: jnp.ndarray  # [E] int32
@@ -31,11 +40,12 @@ class GraphBatch:
     label_mask: jnp.ndarray  # [N] or [G] bool
     edge_feat: jnp.ndarray | None = None  # [E, De]
     graph_ids: jnp.ndarray | None = None  # [N] int32 (batched graphs)
+    ptr: jnp.ndarray | None = None  # [N+1] int32 CSC pointers (serve path)
     n_graphs: int = 1
 
     def tree_flatten(self):
         return ((self.edge_dst, self.edge_src, self.node_feat, self.labels,
-                 self.label_mask, self.edge_feat, self.graph_ids),
+                 self.label_mask, self.edge_feat, self.graph_ids, self.ptr),
                 (self.n_graphs,))
 
     @classmethod
@@ -67,6 +77,21 @@ def _valid(batch: GraphBatch):
     return batch.edge_dst < batch.n_nodes
 
 
+def _ptr_seg_sum(ptr: jnp.ndarray, msgs: jnp.ndarray) -> jnp.ndarray:
+    """Scatter-free segment sum over CSC pointers: cumulative-sum the
+    (already masked) message stream once, then gather the prefix
+    differences at each node's ``ptr`` span. Float summation order differs
+    from ``segment_sum``'s, so the two are numerically close but not
+    bit-equal — the serve path uses this function on BOTH its batched and
+    sequential legs, which is what makes those two bit-identical."""
+    cs = jnp.cumsum(msgs.astype(jnp.float32), axis=0)
+    cs = jnp.concatenate([jnp.zeros((1,) + cs.shape[1:], cs.dtype), cs],
+                         axis=0)
+    p = jnp.clip(ptr, 0, msgs.shape[0])
+    return (jnp.take(cs, p[1:], axis=0)
+            - jnp.take(cs, p[:-1], axis=0)).astype(msgs.dtype)
+
+
 def seg_sum(batch: GraphBatch, msgs: jnp.ndarray,
             use_pallas: bool = False) -> jnp.ndarray:
     """Σ over incoming edges per dst node; SENTINEL edges contribute 0."""
@@ -76,6 +101,8 @@ def seg_sum(batch: GraphBatch, msgs: jnp.ndarray,
         from repro.kernels.ops import segment_sum_padded
         return segment_sum_padded(batch.edge_dst, msgs.astype(jnp.float32),
                                   batch.n_nodes).astype(msgs.dtype)
+    if batch.ptr is not None:
+        return _ptr_seg_sum(batch.ptr, msgs)
     dst = jnp.minimum(batch.edge_dst, batch.n_nodes - 1)
     return jax.ops.segment_sum(msgs, dst, num_segments=batch.n_nodes)
 
@@ -296,6 +323,40 @@ def gnn_apply(cfg: GNNConfig, params: Params, batch: GraphBatch
     if "head" in params:
         out = out @ params["head"]
     return out
+
+
+def subgraph_batch(sub, features: jnp.ndarray) -> GraphBatch:
+    """Forward-ready :class:`GraphBatch` from a sampled ``Subgraph``.
+
+    The serve-path bridge between the preprocessing pipeline and the
+    model zoo: features are gathered through the subgraph's old-VID order,
+    ``edge_dst`` is rebuilt from the CSC pointers (``searchsorted`` over
+    the edge positions — the same reconstruction ``data/sampler.py``
+    uses), and ``ptr`` is attached so every segment reduction lowers
+    scatter-free. Labels are placeholders: serving consumes logits, not
+    losses.
+    """
+    from repro.core.pipeline import gather_features  # models ← core only
+    feats = gather_features(sub, features)
+    n_cap = sub.order.shape[0]
+    e_cap = sub.csc.idx.shape[0]
+    ptr = sub.csc.ptr[:n_cap + 1]
+    pos = jnp.arange(e_cap, dtype=jnp.int32)
+    dst = (jnp.searchsorted(ptr, pos, side="right").astype(jnp.int32) - 1)
+    dst = jnp.where(pos < sub.csc.n_edges, dst, SEN)
+    return GraphBatch(edge_dst=dst, edge_src=sub.csc.idx, node_feat=feats,
+                      labels=jnp.zeros((n_cap,), jnp.int32),
+                      label_mask=jnp.zeros((n_cap,), bool), ptr=ptr)
+
+
+def gnn_apply_batched(cfg: GNNConfig, params: Params, batch: GraphBatch
+                      ) -> jnp.ndarray:
+    """Forward over a stack of padded subgraph batches (every ``batch``
+    leaf carries a leading [S] slot axis; ``vmap`` runs one lane per
+    slot). Each lane computes exactly what ``gnn_apply`` computes on that
+    lane's own batch — the bit-equality ``tests/test_gnn_serve.py``
+    asserts end to end."""
+    return jax.vmap(lambda b: gnn_apply(cfg, params, b))(batch)
 
 
 def pool_graphs(batch: GraphBatch, h: jnp.ndarray) -> jnp.ndarray:

@@ -1,23 +1,29 @@
-"""repro.serve — continuous-batching LM serving over fixed pow2 slots.
+"""repro.serve — continuous-batching serving over fixed pow2 slots.
 
 The serve-side sibling of ``repro.engine``: where the preprocessing engine
-keeps the accelerator fed with subgraphs, this package keeps the decode
-step fed with requests. One jitted slot-decode step (per-slot positions,
-slot-gather prompt feed) admits, prefills, generates and retires
-variable-length requests with zero recompiles after warmup; the
-``AdmissionFeeder`` overlaps host-side tokenize/admit with the in-flight
-device step, and a mesh routes cache attention through the sharded decode
-collectives. See docs/SERVING.md for the slot lifecycle and
-``launch/serve.py`` for the CLI.
+keeps the accelerator feed loops running, this package keeps jitted slot
+steps fed with requests. The payload-agnostic core (``slots`` — scheduler,
+pow2 slot buckets, feeder thread, one-cycle cooling, zero-recompile
+jit-cache discipline) has two clients: ``ServeEngine`` batches LM decode
+(one slot-gather prefill/decode step over the slot KV cache) and
+``GnnServeEngine`` batches GNN inference (one vmapped
+sample → ``sample_subgraph`` convert → forward step per occupied slot).
+Both admit variable-size requests with zero recompiles after warmup; the
+``AdmissionFeeder`` overlaps host-side pad/``device_put`` with the
+in-flight device step, and the LM engine can route cache attention
+through the sharded decode collectives on a mesh. See docs/SERVING.md for
+the slot lifecycle and ``launch/serve.py`` for the CLI.
 """
-from .engine import ServeEngine, ServeStats
+from .engine import ServeEngine
 from .feeder import AdmissionFeeder, PreparedAdmission
+from .gnn import GnnServeEngine
 from .queue import RequestQueue
 from .request import Request, RequestState
-from .scheduler import NO_TOKEN, Scheduler
+from .scheduler import NO_TOKEN, Scheduler, lm_token_route
+from .slots import ServeStats, SlotEngineBase
 
 __all__ = [
-    "AdmissionFeeder", "NO_TOKEN", "PreparedAdmission", "Request",
-    "RequestQueue", "RequestState", "Scheduler", "ServeEngine",
-    "ServeStats",
+    "AdmissionFeeder", "GnnServeEngine", "NO_TOKEN", "PreparedAdmission",
+    "Request", "RequestQueue", "RequestState", "Scheduler", "ServeEngine",
+    "ServeStats", "SlotEngineBase", "lm_token_route",
 ]

@@ -1,8 +1,10 @@
 """ServeEngine — continuous-batching greedy decode over fixed pow2 slots.
 
-The serving half of the ROADMAP north star: a request batcher over
-``models.transformer.lm_decode_step`` in which admission, prefill, decode
-and retirement all happen inside ONE jitted step function of fixed shapes.
+The LM client of the payload-agnostic slot core (``serve.slots``): this
+module owns only what is decode-specific — the slot-gather step over
+``models.transformer.lm_decode_step``, the KV cache, prompt admission rows
+— while queueing, FIFO admission, cooling, stats and the run loop are
+inherited from :class:`~repro.serve.slots.SlotEngineBase`.
 
 Design (mirrors ``engine.service``'s zero-recompile discipline):
 
@@ -29,33 +31,22 @@ Design (mirrors ``engine.service``'s zero-recompile discipline):
   admissions while the device decodes, and the run loop processes step
   ``k-1``'s emitted tokens while step ``k`` is in flight (JAX async
   dispatch) — ``engine.prefetch``'s double-buffer schedule on the serve
-  path.
+  path. This is the ``pipeline_steps`` schedule of the slot core, and the
+  reason retired slots pass through the scheduler's one-cycle cooling.
 """
 from __future__ import annotations
 
-import dataclasses
-import threading
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.graph import next_pow2
 from repro.models.transformer import LMConfig, lm_decode_step, make_cache
 
-from .feeder import AdmissionFeeder
-from .queue import RequestQueue
 from .request import Request
-from .scheduler import NO_TOKEN, Scheduler
+from .scheduler import NO_TOKEN
+from .slots import ServeStats, SlotEngineBase, deactivate_update
 
-
-@dataclasses.dataclass
-class ServeStats:
-    steps: int = 0
-    admitted: int = 0
-    retired: int = 0
-    tokens_processed: int = 0  # prefill + generated, active slots only
-    tokens_generated: int = 0
+__all__ = ["ServeEngine", "ServeStats"]
 
 
 def _build_step(cfg: LMConfig, prompt_cap: int, attn_fn):
@@ -104,11 +95,7 @@ def _admit_update(state, slot, row, plen):
     }
 
 
-def _deactivate_update(state, slot):
-    return {**state, "active": state["active"].at[slot].set(False)}
-
-
-class ServeEngine:
+class ServeEngine(SlotEngineBase):
     """Continuous-batching decode engine over ``n_slots`` request slots.
 
     ``submit()`` requests from any thread, ``close_submissions()`` to end
@@ -123,19 +110,16 @@ class ServeEngine:
                  mesh=None, eos_id: int | None = None,
                  feeder_depth: int = 2):
         self.cfg = cfg
-        self.n_slots = next_pow2(n_slots)
         self.max_len = next_pow2(max_len)
-        self.prompt_cap = next_pow2(prompt_cap or self.max_len // 2)
-        if self.prompt_cap > self.max_len:
+        prompt_cap = next_pow2(prompt_cap or self.max_len // 2)
+        if prompt_cap > self.max_len:
             raise ValueError("prompt_cap exceeds max_len")
+        super().__init__(n_slots=next_pow2(n_slots), row_cap=prompt_cap,
+                         eos_id=eos_id, feeder_depth=feeder_depth,
+                         pipeline_steps=True)
+        self.prompt_cap = prompt_cap
         self.mesh = mesh
         self.eos_id = eos_id
-        self.queue = RequestQueue()
-        self.scheduler = Scheduler(self.n_slots, eos_id=eos_id)
-        self.stats = ServeStats()
-        self._feeder_depth = feeder_depth
-        self._rid = 0
-        self._rid_lock = threading.Lock()
 
         attn_fn = None
         if mesh is not None:
@@ -153,7 +137,7 @@ class ServeEngine:
         # repro: allow-raw-jit — same per-engine cache argument as _step.
         self._admit_fn = jax.jit(_admit_update, donate_argnums=(0,))
         # repro: allow-raw-jit — same per-engine cache argument as _step.
-        self._deactivate_fn = jax.jit(_deactivate_update,
+        self._deactivate_fn = jax.jit(deactivate_update,
                                       donate_argnums=(0,))
 
     # ---------------------------------------------------------------- state
@@ -179,17 +163,6 @@ class ServeEngine:
             "active": put(jnp.zeros((s,), bool)),
         }
 
-    def step_cache_size(self) -> int:
-        """Compiled-program count behind the serve step (the zero-recompile
-        guard reads this; same ``_cache_size`` introspection as
-        ``engine.service.preprocess_cache_size``)."""
-        try:
-            return int(self._step._cache_size())
-        except AttributeError as e:
-            raise NotImplementedError(
-                "jax.jit cache introspection (_cache_size) is unavailable "
-                "on this JAX version") from e
-
     # ------------------------------------------------------------ admission
     def submit(self, prompt, max_new: int) -> Request:
         """Enqueue one request (thread-safe); returns its Request handle."""
@@ -201,82 +174,4 @@ class ServeEngine:
             raise ValueError(
                 f"prompt+max_new {len(prompt) + max_new} exceeds KV bucket "
                 f"{self.max_len}")
-        with self._rid_lock:
-            rid = self._rid
-            self._rid += 1
-        req = Request(rid=rid, prompt=prompt, max_new=max_new)
-        self.queue.put(req)
-        return req
-
-    def close_submissions(self) -> None:
-        self.queue.close()
-
-    def reopen(self) -> None:
-        """Start a new request stream after ``run()`` returned.
-
-        ``close_submissions()`` is sticky on the queue, so callers that
-        warm up and then measure (benchmarks, tests) reuse one engine —
-        and its compiled programs — across streams through this method
-        instead of reaching into the queue attribute.
-        """
-        if not self.queue.closed:
-            raise RuntimeError("reopen() is only valid after the previous "
-                               "stream was closed")
-        self.queue = RequestQueue()
-
-    def _try_admit(self, feeder: AdmissionFeeder,
-                   timeout: float | None = None) -> int:
-        """Seat prepared requests while slots are free; ``timeout`` applies
-        to the first poll only (the idle loop's block-for-work knob)."""
-        n = 0
-        while self.scheduler.has_free_slot:
-            prep = feeder.poll(timeout=timeout if n == 0 else None)
-            if prep is None:
-                break
-            slot = self.scheduler.admit(prep)
-            self.state = self._admit_fn(self.state, jnp.int32(slot),
-                                        prep.row, jnp.int32(prep.plen))
-            self.stats.admitted += 1
-            n += 1
-        return n
-
-    def _process(self, emitted, completed: list[Request]) -> None:
-        for slot, req in self.scheduler.process(np.asarray(emitted)):
-            self.state = self._deactivate_fn(self.state, jnp.int32(slot))
-            self.stats.retired += 1
-            self.stats.tokens_generated += len(req.tokens_out)
-            completed.append(req)
-
-    # ------------------------------------------------------------- the loop
-    def run(self) -> list[Request]:
-        """Drive the engine until the request stream is closed and drained.
-
-        Returns completed requests in retirement order. The loop keeps one
-        step in flight: while the device runs step ``k``, the host routes
-        step ``k-1``'s tokens and the feeder prepares admissions.
-        """
-        completed: list[Request] = []
-        pending = None  # step k-1's emitted tokens (device array)
-        with AdmissionFeeder(self.queue, self.prompt_cap,
-                             depth=self._feeder_depth) as feeder:
-            while True:
-                self._try_admit(feeder)
-                if self.scheduler.n_active == 0:
-                    if pending is not None:
-                        self._process(pending, completed)
-                        pending = None
-                        continue  # processing may have freed cooling slots
-                    self.scheduler.flush_cooling()
-                    if feeder.done:
-                        break
-                    self._try_admit(feeder, timeout=0.05)
-                    continue
-                self.state, emitted = self._step(self.params, self.state)
-                self.stats.steps += 1
-                self.stats.tokens_processed += self.scheduler.n_active
-                if pending is not None:
-                    self._process(pending, completed)
-                pending = emitted
-            if pending is not None:
-                self._process(pending, completed)
-        return completed
+        return self._enqueue(prompt, max_new)

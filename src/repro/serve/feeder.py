@@ -37,7 +37,7 @@ class PreparedAdmission:
 
 def _produce(rq: RequestQueue, out: _queue.Queue, stop: threading.Event,
              prompt_cap: int, device_put: bool, err_box: list,
-             finished: threading.Event) -> None:
+             finished: threading.Event, pad_value: int) -> None:
     """Producer loop (module-level for the same GC-root reason as
     ``engine.prefetch._produce``: the thread must not pin the feeder)."""
     try:
@@ -47,7 +47,7 @@ def _produce(rq: RequestQueue, out: _queue.Queue, stop: threading.Event,
                 if rq.closed and len(rq) == 0:
                     return  # stream over; `finished` set in the finally
                 continue
-            row = np.zeros((prompt_cap,), np.int32)
+            row = np.full((prompt_cap,), pad_value, np.int32)
             row[:len(req.prompt)] = np.asarray(req.prompt, np.int32)
             if device_put:
                 row = jax.device_put(row)
@@ -77,7 +77,7 @@ class AdmissionFeeder:
     """
 
     def __init__(self, rq: RequestQueue, prompt_cap: int, depth: int = 2,
-                 device_put: bool = True):
+                 device_put: bool = True, pad_value: int = 0):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self._out: _queue.Queue = _queue.Queue(maxsize=depth)
@@ -85,10 +85,13 @@ class AdmissionFeeder:
         self._finished = threading.Event()
         self._err_box: list[BaseException] = []
         self._done = False
+        # pad_value: LM rows zero-pad (0 is a harmless vocab id behind
+        # prompt_len); GNN seed rows SENTINEL-pad (padding seeds must have
+        # degree 0 so real seeds keep the first new VIDs).
         self._thread = threading.Thread(
             target=_produce, args=(rq, self._out, self._stop, prompt_cap,
                                    device_put, self._err_box,
-                                   self._finished),
+                                   self._finished, pad_value),
             daemon=True, name="repro-serve-feeder")
         self._thread.start()
 

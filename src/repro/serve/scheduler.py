@@ -26,12 +26,40 @@ from .request import Request, RequestState
 NO_TOKEN = -1  # emitted-token sentinel for slots that generated nothing
 
 
-class Scheduler:
-    """FIFO admission into the lowest free slot; length/eos retirement."""
+def lm_token_route(eos_id: int | None = None):
+    """The default route policy: emissions are greedy-decode token ids.
 
-    def __init__(self, n_slots: int, eos_id: int | None = None):
+    A route policy maps one slot's emission to a retirement verdict:
+    ``None`` = nothing emitted this step (prefilling / inactive), ``False``
+    = emission consumed, request continues, ``True`` = request finished.
+    LM routing skips ``NO_TOKEN``, retires on ``eos_id`` without recording
+    it, and otherwise appends the token until ``max_new`` is spent.
+    """
+    def route(req: Request, emission) -> bool | None:
+        tok = int(emission)
+        if tok == NO_TOKEN:
+            return None
+        if eos_id is not None and tok == eos_id:
+            return True
+        req.tokens_out.append(tok)
+        return len(req.tokens_out) >= req.max_new
+    return route
+
+
+class Scheduler:
+    """FIFO admission into the lowest free slot; route-policy retirement.
+
+    ``route`` decides per-slot retirement from the step's emissions
+    (defaults to :func:`lm_token_route` over ``eos_id``); the GNN engine
+    swaps in a one-shot prediction policy. Everything else — slot
+    occupancy, FIFO order, cooling — is payload-agnostic.
+    """
+
+    def __init__(self, n_slots: int, eos_id: int | None = None,
+                 route=None):
         self.n_slots = n_slots
         self.eos_id = eos_id
+        self.route = route or lm_token_route(eos_id)
         self._slots: list[Request | None] = [None] * n_slots
         self._free: list[int] = list(range(n_slots))  # kept sorted
         self._cooling: list[int] = []
@@ -59,12 +87,13 @@ class Scheduler:
 
     # ----------------------------------------------------------- retirement
     def process(self, emitted: np.ndarray) -> list[tuple[int, Request]]:
-        """Route one step's emitted tokens; return newly finished slots.
+        """Route one step's emissions; return newly finished slots.
 
-        ``emitted`` is the step's [n_slots] int32 output: a generated token
-        id, or ``NO_TOKEN`` for slots that are prefilling / inactive. Slots
-        in ``cooling`` re-enter the free list here — their potentially
-        stale in-flight step has now been consumed.
+        ``emitted`` is the step's per-slot output, indexed ``emitted[slot]``
+        — an int32 token for LM decode, an [1 + cap] prediction row for the
+        GNN engine; the route policy interprets it. Slots in ``cooling``
+        re-enter the free list here — their potentially stale in-flight
+        step has now been consumed.
         """
         # slots retired last cycle have now had their stale in-flight step
         # consumed (this very call) — safe to re-admit
@@ -74,14 +103,7 @@ class Scheduler:
         for slot, req in enumerate(self._slots):
             if req is None or req.state is RequestState.FINISHED:
                 continue
-            tok = int(emitted[slot])
-            if tok == NO_TOKEN:
-                continue
-            if self.eos_id is not None and tok == self.eos_id:
-                finished.append((slot, req))
-                continue
-            req.tokens_out.append(tok)
-            if len(req.tokens_out) >= req.max_new:
+            if self.route(req, emitted[slot]):
                 finished.append((slot, req))
         for slot, req in finished:
             req.state = RequestState.FINISHED

@@ -280,4 +280,5 @@ def test_registry_summary_shape():
     s = registry_summary()
     assert s["library_size"] == 81
     assert s["convert_cases"] >= 972
-    assert set(s["contracts"]) == {"convert", "sample", "shard", "serve"}
+    assert set(s["contracts"]) == {"convert", "sample", "shard", "serve",
+                                   "gnn_serve"}

@@ -1,0 +1,182 @@
+"""Property tests for the payload-agnostic slot-batching core
+(``repro.serve.slots`` + scheduler/feeder/bucketing) — run once for BOTH
+clients: every property is parametrized over the LM routing/padding and
+the GNN routing/padding, so a core regression cannot hide behind the
+payload it happens to be exercised with.
+
+* scheduler one-cycle cooling never leaks a stale slot (a retired slot is
+  not re-admissible until a full process() cycle consumed its potentially
+  stale in-flight emission), and free/cooling/occupied always partition
+  the slot set;
+* pow2 bucketing is monotone and idempotent (``next_pow2`` and the
+  engine-service row/batch/edge bucketers built on it);
+* the feeder preserves FIFO and relays producer errors out-of-band for
+  any payload row shape.
+"""
+import collections
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.graph import SENTINEL, next_pow2  # noqa: E402
+from repro.serve import (AdmissionFeeder, Request, RequestQueue,  # noqa: E402
+                         Scheduler, lm_token_route)
+from repro.serve.feeder import PreparedAdmission  # noqa: E402
+from repro.serve.gnn import gnn_route  # noqa: E402
+from repro.serve.scheduler import NO_TOKEN  # noqa: E402
+
+
+# --------------------------------------------------------------- clients
+def _lm_client():
+    """LM decode: int token emissions, budget retirement, zero padding."""
+    def emission(slot_occupied, step):
+        return np.int32(10 + step) if slot_occupied else np.int32(NO_TOKEN)
+    return lm_token_route(None), emission, 0
+
+
+def _gnn_client():
+    """GNN predict: [flag, preds...] row emissions, one-shot retirement,
+    SENTINEL padding."""
+    def emission(slot_occupied, step):
+        row = np.full((5,), step, np.int32)
+        row[0] = 1 if slot_occupied else 0
+        return row
+    return gnn_route, emission, int(SENTINEL)
+
+
+CLIENTS = {"lm": _lm_client, "gnn": _gnn_client}
+
+
+def _prep(rid, plen=2, max_new=1, pad=0):
+    row = np.full((4,), pad, np.int32)
+    row[:plen] = np.arange(1, plen + 1)
+    req = Request(rid=rid, prompt=list(range(1, plen + 1)), max_new=max_new)
+    return PreparedAdmission(req, row, plen)
+
+
+# ------------------------------------------------- scheduler cooling safety
+@pytest.mark.parametrize("client", sorted(CLIENTS))
+@settings(deadline=None, max_examples=40)
+@given(n_slots=st.integers(1, 4),
+       budgets=st.lists(st.integers(1, 3), min_size=1, max_size=12))
+def test_cooling_never_leaks_a_stale_slot(client, n_slots, budgets):
+    """Drive a full admission/step/retire schedule: a slot retired during
+    process() #t must not be re-admitted before process() #t+1 has
+    consumed the (potentially stale) in-flight step, and the slot sets
+    must partition [0, n_slots) after every call."""
+    route, emission, pad = CLIENTS[client]()
+    if client == "gnn":
+        budgets = [1] * len(budgets)  # GNN requests are one-shot
+    s = Scheduler(n_slots, route=route)
+    pending = collections.deque(
+        _prep(rid, max_new=b, pad=pad) for rid, b in enumerate(budgets))
+    retired_at: dict[int, int] = {}
+    n_process = 0
+    done = 0
+    while pending or s.n_active or s._cooling:
+        while s.has_free_slot and pending:
+            slot = s.admit(pending.popleft())
+            # one-cycle cooling: retirement at process #t, merge back to
+            # free during #t+1, earliest admission before #t+2
+            if slot in retired_at:
+                assert n_process >= retired_at[slot] + 2, (
+                    f"slot {slot} re-admitted after "
+                    f"{n_process - retired_at[slot]} process cycle(s)")
+        emitted = np.stack([emission(s._slots[i] is not None, n_process)
+                            for i in range(n_slots)])
+        finished = s.process(emitted)
+        for slot, req in finished:
+            retired_at[slot] = n_process
+            done += 1
+        n_process += 1
+        occupied = {i for i, r in enumerate(s._slots) if r is not None}
+        free, cooling = set(s._free), set(s._cooling)
+        assert free | cooling | occupied == set(range(n_slots))
+        assert len(free) + len(cooling) + len(occupied) == n_slots
+    assert done == len(budgets)
+
+
+# --------------------------------------------------------- pow2 bucketing
+@settings(deadline=None, max_examples=100)
+@given(a=st.integers(1, 1 << 24), b=st.integers(1, 1 << 24))
+def test_next_pow2_monotone_idempotent(a, b):
+    pa, pb = next_pow2(a), next_pow2(b)
+    assert pa >= a and pa & (pa - 1) == 0  # covering power of two
+    assert next_pow2(pa) == pa  # idempotent
+    if a <= b:
+        assert pa <= pb  # monotone
+
+
+@settings(deadline=None, max_examples=30)
+@given(n_rows=st.integers(1, 4), width=st.integers(1, 16))
+def test_seed_row_bucketing_idempotent_and_prefix_preserving(n_rows, width):
+    import jax.numpy as jnp
+    from repro.engine.service import bucket_batch, bucket_seed_rows
+    rows = jnp.arange(n_rows * width, dtype=jnp.int32).reshape(n_rows,
+                                                               width)
+    b = bucket_seed_rows(rows)
+    cap = b.shape[1]
+    assert cap == next_pow2(width)
+    assert bucket_seed_rows(b) is b  # idempotent: pow2 passes through
+    np.testing.assert_array_equal(np.asarray(b[:, :width]),
+                                  np.asarray(rows))  # prefix untouched
+    assert np.all(np.asarray(b[:, width:]) == int(SENTINEL))
+    flat = bucket_batch(rows[0])
+    np.testing.assert_array_equal(np.asarray(flat),
+                                  np.asarray(b[0]))  # row ≡ batch bucketer
+
+
+# ------------------------------------------------------------------ feeder
+@pytest.mark.parametrize("client", sorted(CLIENTS))
+@settings(deadline=None, max_examples=10)
+@given(plens=st.lists(st.integers(1, 4), min_size=1, max_size=6))
+def test_feeder_fifo_and_padding_any_payload(client, plens):
+    """The feeder hands rows back in submission order with the client's
+    pad value in the tail — regardless of payload mix."""
+    _, _, pad = CLIENTS[client]()
+    q = RequestQueue()
+    for rid, plen in enumerate(plens):
+        q.put(Request(rid=rid, prompt=list(range(1, plen + 1)), max_new=1))
+    q.close()
+    got = []
+    with AdmissionFeeder(q, prompt_cap=4, device_put=False,
+                         pad_value=pad) as feeder:
+        while True:
+            item = feeder.poll(timeout=1.0)
+            if item is None:
+                if feeder.done:
+                    break
+                continue
+            got.append(item)
+    assert [p.request.rid for p in got] == list(range(len(plens)))
+    for p, plen in zip(got, plens):
+        np.testing.assert_array_equal(
+            p.row, list(range(1, plen + 1)) + [pad] * (4 - plen))
+
+
+@pytest.mark.parametrize("client", sorted(CLIENTS))
+@settings(deadline=None, max_examples=10)
+@given(n_ok=st.integers(0, 3))
+def test_feeder_relays_errors_out_of_band_any_payload(client, n_ok):
+    """A producer failure anywhere in the stream surfaces out of poll()
+    after the already-prepared items drain — it must never strand the
+    engine loop waiting on a done flag that cannot flip."""
+    _, _, pad = CLIENTS[client]()
+    q = RequestQueue()
+    for rid in range(n_ok):
+        q.put(Request(rid=rid, prompt=[1], max_new=1))
+    q.put(Request(rid=n_ok, prompt=["not-an-id"], max_new=1))
+    q.close()
+    seen = 0
+    with AdmissionFeeder(q, prompt_cap=4, device_put=False,
+                         pad_value=pad) as feeder:
+        with pytest.raises(ValueError):
+            for _ in range(200):  # bounded: error lands within ~a poll
+                item = feeder.poll(timeout=0.1)
+                if item is not None:
+                    seen += 1
+                assert not feeder.done  # poll raises before done can flip
+    assert seen <= n_ok  # valid prefix may drain, never the poisoned item
