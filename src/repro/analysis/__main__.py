@@ -29,7 +29,8 @@ def main(argv=None) -> int:
     ap.add_argument("--grid", choices=("smoke", "full"), default="full",
                     help="contract sweep size (default: full)")
     ap.add_argument("--contracts",
-                    default="convert,sample,shard,serve,gnn_serve",
+                    default="convert,sample,shard,serve,gnn_serve,"
+                            "delta_update",
                     help="comma-separated contract subset for --hlo")
     ap.add_argument("--devices", type=int, default=8,
                     help="virtual host devices for the sharded contract")

@@ -106,6 +106,55 @@ def _lower_sample(case: Case) -> str:
             .compile().as_text())
 
 
+def _make_delta(w, d_cap: int):
+    from repro.core.delta import EdgeDelta
+    rng = np.random.default_rng(3)
+    k = max(1, d_cap // 2)
+    return EdgeDelta.from_arrays(
+        rng.integers(0, w.n, k), rng.integers(0, w.n, k),
+        rng.integers(0, w.n, k), rng.integers(0, w.n, k),
+        n_nodes=w.n, capacity=d_cap)
+
+
+def _lower_delta(case: Case) -> str:
+    csc = pipeline.convert(_make_coo(case.workload), case.cfg)
+    delta = _make_delta(case.workload, case.d_cap)
+    # repro: allow-raw-jit — AOT lowering probe; the compiled object is
+    # discarded after its HLO text is read, nothing dispatches through it.
+    return (jax.jit(lambda c, d: pipeline.apply_delta(c, d, case.cfg,
+                                                      mode="merge"))
+            .lower(csc, delta).compile().as_text())
+
+
+def _delta_cache_guard(cases: list[Case], progress=None) -> Report:
+    """Recompile guard on the module-level delta-update dispatch: the
+    second call with an identical (cfg, e_cap, delta bucket, out_cap) must
+    hit the cache — the serve path's zero-recompile update stream depends
+    on exactly this."""
+    from repro.engine import service
+    rep = Report()
+    seen: set[tuple] = set()
+    for case in cases:
+        if case.structure in seen:
+            continue
+        seen.add(case.structure)
+        rep.checks += 1
+        if progress:
+            progress(f"delta cache guard {case.label}")
+        csc = pipeline.convert(_make_coo(case.workload), case.cfg)
+        delta = _make_delta(case.workload, case.d_cap)
+        service.apply_delta_jit(csc, delta, cfg=case.cfg)
+        mid = service.apply_delta_jit._cache_size()
+        service.apply_delta_jit(csc, delta, cfg=case.cfg)
+        after = service.apply_delta_jit._cache_size()
+        if after != mid:
+            rep.violations.append(Violation(
+                "delta_update", case.label, "cache-size",
+                f"re-dispatching an already-seen (cfg, bucket) grew the "
+                f"module-level jit cache {mid} → {after}"))
+    return rep
+
+
 def _lower_shard(case: Case) -> str:
     from repro.engine.shard import shard_convert
     mesh = jax.make_mesh((case.n_dev,), ("data",))
@@ -212,6 +261,12 @@ def check_sample(grid: str = "full", progress=None) -> Report:
                           progress)
 
 
+def check_delta(grid: str = "full", progress=None) -> Report:
+    cases = contracts.delta_cases(grid)
+    rep = _check_grouped(cases, _lower_delta, progress)
+    return rep.merge(_delta_cache_guard(cases, progress))
+
+
 def check_shard(grid: str = "full", progress=None) -> Report:
     nd = jax.device_count()
     nd = 1 << (nd.bit_length() - 1)  # pow2 floor
@@ -311,12 +366,14 @@ CONTRACT_CHECKS = {
     "shard": check_shard,
     "serve": check_serve,
     "gnn_serve": check_gnn_serve,
+    "delta_update": check_delta,
 }
 
 
 def check_all(grid: str = "full",
               parts: tuple[str, ...] = ("convert", "sample", "shard",
-                                        "serve", "gnn_serve"),
+                                        "serve", "gnn_serve",
+                                        "delta_update"),
               progress=None) -> Report:
     """Run every registered contract; ``grid="smoke"`` shrinks the convert
     sweep to the smoke configs/workload (used by the test suite — CI's

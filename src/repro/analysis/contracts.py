@@ -30,10 +30,14 @@ import dataclasses
 
 from repro.core.costmodel import (EngineConfig, SORT_STRATEGIES, Workload,
                                   bitstream_library, convert_while_count,
-                                  merge_round_count,
+                                  delta_epilogue_strategy,
+                                  delta_sort_op_count, delta_while_count,
+                                  delta_workload, merge_round_count,
                                   pointer_reindex_strategy,
                                   reindex_dispatch_count,
                                   reindex_sort_op_count,
+                                  resolve_delta_mode,
+                                  resolve_delta_sort_strategy,
                                   sample_edge_capacity, sample_vid_capacity,
                                   shard_collective_bytes_budget,
                                   shard_convert_while_count,
@@ -73,6 +77,7 @@ class Case:
     structure: tuple
     expect: Expectation
     n_dev: int = 1
+    d_cap: int = 0  # delta bucket (delta_update contract only)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -292,6 +297,72 @@ def gnn_serve_cases(grid: str = "full") -> list[Case]:
     return cases
 
 
+# Delta grid: the convert smoke graph at two delta buckets, plus the
+# pair-key regime (n=70000 defeats packing → 2 passes per delta sort).
+DELTA_WORKLOADS = (
+    (Workload(n=200, e=2048), 64),
+    (Workload(n=200, e=2048), 256),
+    (Workload(n=70000, e=2048), 64),
+)
+SMOKE_DELTA_WORKLOADS = ((Workload(n=200, e=2048), 64),)
+
+
+def delta_structure(cfg: EngineConfig, w: Workload, d_cap: int,
+                    strategy: str) -> tuple:
+    """Program-identity key for the compiled ``apply_delta`` merge path:
+    shapes (n, e_cap, delta bucket), the delta sorts' pass count and
+    strategy knobs, and the rank passes' fused/unfused lowering."""
+    wd = delta_workload(w, d_cap)
+    fused = delta_epilogue_strategy(cfg, w, d_cap) == "fused"
+    if strategy == "xla_sort":
+        extra: tuple = ()
+    else:
+        chunk = min(cfg.w_upe, wd.e)
+        extra = (chunk, cfg.radix_bits, cfg.merge_fan_in)
+    return (("delta", strategy, sort_pass_count(cfg, wd), w.n,
+             next_pow2(w.e), wd.e, fused) + extra)
+
+
+def delta_expectation(cfg: EngineConfig, w: Workload, d_cap: int,
+                      strategy: str) -> Expectation:
+    """The incremental-conversion census the Table-I delta terms price:
+    scatter-free like the whole spine (tombstones compact through the
+    rank/gather router), while ops exactly ``delta_while_count`` (ZERO on
+    the resolved program: native delta sorts + fused rank passes — the
+    whole merge is while-free), native sorts exactly
+    ``delta_sort_op_count`` (2 delta streams × passes, plus the ONE
+    event-zip merge rung, which is always a native sort: it doubles as
+    the materialization barrier against elemental re-evaluation of the
+    event table inside the splice gathers)."""
+    return Expectation(
+        forbidden_ops=("scatter",),
+        required_ops=("gather", "sort"),
+        while_count=delta_while_count(cfg, w, d_cap, strategy),
+        sort_count=delta_sort_op_count(cfg, w, d_cap, strategy),
+    )
+
+
+def delta_cases(grid: str = "full") -> list[Case]:
+    """The delta sweep: every sort strategy forced (as in the convert
+    contract) × both rank lowerings, over the delta workload grid."""
+    points = SMOKE_DELTA_WORKLOADS if grid == "smoke" else DELTA_WORKLOADS
+    reindex = ("auto",) if grid == "smoke" else ("auto", "unfused")
+    cases = []
+    for w, d_cap in points:
+        for rs in reindex:
+            for strategy in SORT_STRATEGIES:
+                cfg = EngineConfig(sort_strategy=strategy,
+                                   reindex_strategy=rs)
+                cases.append(Case(
+                    contract="delta_update",
+                    label=f"{cfg.key} n={w.n} e={w.e} d={d_cap}",
+                    cfg=cfg, workload=w, strategy=strategy,
+                    structure=delta_structure(cfg, w, d_cap, strategy),
+                    expect=delta_expectation(cfg, w, d_cap, strategy),
+                    d_cap=d_cap))
+    return cases
+
+
 def shard_expectation(cfg: EngineConfig, w: Workload, n_dev: int,
                       strategy: str) -> Expectation:
     """The sharded convert: scatter-free, while census from
@@ -345,9 +416,11 @@ def registry_summary() -> dict:
     """Contract registry overview (docs + ``--json`` report header)."""
     convert = convert_cases("full")
     return {
-        "contracts": ["convert", "sample", "shard", "serve", "gnn_serve"],
+        "contracts": ["convert", "sample", "shard", "serve", "gnn_serve",
+                      "delta_update"],
         "convert_cases": len(convert),
         "convert_groups": len({c.structure for c in convert}),
+        "delta_cases": len(delta_cases("full")),
         "workloads": [dataclasses.asdict(w) for w in CONVERT_WORKLOADS],
         "strategies": list(SORT_STRATEGIES),
         "library_size": len(bitstream_library()),
@@ -380,4 +453,26 @@ def model_self_consistency(cfg: EngineConfig, w: Workload,
                 f"resolved pointer strategy {ptr_strat!r}")
     if reindex_dispatch_count("fused") != 0:
         return "fused reindex epilogue must price zero loop dispatches"
+    # Delta-term ties (priced at a canonical 64-edge bucket): the while
+    # census must decompose into the two delta-stream sorts plus the rank
+    # passes exactly as the resolved epilogue strategy dictates, the sort
+    # census must be the two streams' passes plus the ONE event-zip rung,
+    # and a single-edge delta must always resolve to the merge path.
+    from repro.core.delta import DELTA_RANK_PASSES
+    wd = delta_workload(w, 64)
+    ds = resolve_delta_sort_strategy(cfg, wd)
+    ranks = (0 if delta_epilogue_strategy(cfg, w, 64) == "fused"
+             else DELTA_RANK_PASSES)
+    if delta_while_count(cfg, w, 64) != \
+            2 * sort_while_count(cfg, wd, ds) + ranks:
+        return "delta while census inconsistent with its sort + rank terms"
+    if delta_sort_op_count(cfg, w, 64) != \
+            2 * sort_op_count(cfg, wd, ds) + 1:
+        return ("delta sort census must be 2·stream passes + the event-zip "
+                "rung")
+    # Below ~2048 edges both paths finish inside one dispatch quantum and
+    # the model's fixed constants dominate either side of the tie, so the
+    # mode assertion is only meaningful at real workload sizes.
+    if next_pow2(w.e) >= 2048 and resolve_delta_mode(cfg, w, 1) != "merge":
+        return "a single-edge delta must never price above a full rebuild"
     return None

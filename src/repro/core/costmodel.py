@@ -363,6 +363,211 @@ def relocation_bytes(cfg: EngineConfig, w: Workload,
 
 SORT_STRATEGIES = ("chunked_merge", "global_radix", "xla_sort")
 REINDEX_STRATEGIES = ("fused", "unfused")
+DELTA_MODES = ("merge", "rebuild")
+
+
+# ---------------------------------------------------------------------------
+# Incremental-conversion (delta merge) terms — Table-I amendment #4.
+# The update path (core/delta.py) sorts TWO delta-sized streams (inserts +
+# deletes; one global sort each in packed-key mode, the two-pass pair
+# scheme otherwise) plus the ONE event-zip merge rung (a 2·d keys-only
+# native sort), then splices positionally: three bounded row searches with
+# delta-many queries over the existing stream, one full-width event rank
+# (e queries over the 2·d event table) and two (n+1)-query pointer
+# corrections — the DELTA_RANK_PASSES whose loop structure is the
+# fused/unfused SCR-epilogue axis. ``resolve_delta_mode`` prices this
+# against a full re-convert of the combined edge set so
+# ``pipeline.apply_delta(mode="auto")`` falls back to a rebuild exactly
+# where a large delta makes the splice lose.
+# ---------------------------------------------------------------------------
+
+def delta_workload(w: Workload, d_cap: int) -> Workload:
+    """The delta sorts' workload: the graph's VID space over the pow2
+    delta bucket (what ``pipeline.apply_delta`` resolves its sort strategy
+    on)."""
+    return Workload(n=w.n, e=next_pow2(d_cap), l=w.l, k=w.k, b=w.b)
+
+
+def resolve_delta_sort_strategy(cfg: EngineConfig, wd: Workload,
+                                cal: "Calibration | None" = None) -> str:
+    """Sort-strategy resolution for the delta streams.
+
+    The delta path consumes its sorted streams through gathers (the row
+    searches bracket every query against them), so they must land in
+    thunk-materialized buffers. The radix strategies end in elementwise
+    merge/relocation chains that CPU fusion re-evaluates per downstream
+    gathered element (the hazard core/delta.py documents at its merge
+    rung), so dispatching one would force the path to append a d-sized
+    materializing sort anyway — price every strategy as its Ordering
+    latency plus that barrier sort, which the native sort gets for free.
+    At delta buckets the native sort therefore wins outright; a forced
+    ``cfg.sort_strategy`` is still honored (the barrier inside
+    ``delta_merge`` keeps any strategy correct, just not optimal)."""
+    if cfg.sort_strategy != "auto":
+        return cfg.sort_strategy
+    cal = cal or Calibration()
+
+    def price(s: str) -> float:
+        t = _ordering_seconds(cfg, wd, cal, s)
+        if s != "xla_sort":
+            t += _ordering_seconds(cfg, wd, cal, "xla_sort")
+        return t
+
+    return min(SORT_STRATEGIES, key=price)
+
+
+def delta_epilogue_strategy(cfg: EngineConfig, w: Workload,
+                            d_cap: int | None = None,
+                            cal: "Calibration | None" = None) -> str:
+    """fused/unfused resolution for the DELTA_RANK_PASSES full-width rank
+    passes of one delta merge — one uniform strategy (the passes share
+    the loop structure so the while census is ``0`` or exactly
+    ``DELTA_RANK_PASSES``), resolved on the dominant load: the event rank
+    (e queries over the 2·d event table) plus the two (n+1)-query pointer
+    corrections.
+
+    Per search round the fused path streams one pivot gather and one
+    materialized carry per query (8 bytes); the unfused ``fori_loop``
+    moves the same pivots plus its two loop-carried bound buffers through
+    the while body (≈24 bytes) and pays one trip dispatch — so fused wins
+    the delta splice at every measured CPU scale (1.2 ms vs 3.0 ms at
+    131k/0.1%), and a TPU recalibration raising ``loop_trip_s`` only
+    widens the gap. A forced ``cfg.reindex_strategy`` short-circuits."""
+    if cfg.reindex_strategy != "auto":
+        return cfg.reindex_strategy
+    cal = cal or Calibration()
+    wd = delta_workload(w, d_cap if d_cap is not None else 1)
+    rounds = reindex_round_count(2 * wd.e)
+    q = next_pow2(w.e) + 2 * (w.n + 1)
+    t_fused = rounds * q * 8.0 / cal.unroll_bytes_per_s
+    t_unfused = rounds * (q * 24.0 / cal.unroll_bytes_per_s
+                          + cal.loop_trip_s)
+    return "fused" if t_fused <= t_unfused else "unfused"
+
+
+def delta_while_count(cfg: EngineConfig, w: Workload, d_cap: int,
+                      strategy: str | None = None,
+                      cal: "Calibration | None" = None) -> int:
+    """While ops the compiled ``apply_delta`` merge path lowers to: two
+    delta-stream sorts (each a full Ordering census on the delta bucket —
+    ``sort_while_count`` already folds in the packed-vs-pair pass count)
+    plus the rank passes, which contribute ``DELTA_RANK_PASSES``
+    fori_loops unfused and ZERO fused (every delta-sized search unrolls
+    statically regardless; the event-zip rung is a native sort, not a
+    loop). Under the resolved delta strategy (native sort) the whole
+    merge program is while-free. The ``delta_update`` contract in
+    ``analysis/contracts.py`` asserts the compiled program agrees."""
+    from .delta import DELTA_RANK_PASSES
+    wd = delta_workload(w, d_cap)
+    if strategy is None:
+        strategy = resolve_delta_sort_strategy(cfg, wd, cal)
+    ranks = (0 if delta_epilogue_strategy(cfg, w, d_cap, cal) == "fused"
+             else DELTA_RANK_PASSES)
+    return 2 * sort_while_count(cfg, wd, strategy) + ranks
+
+
+def delta_sort_op_count(cfg: EngineConfig, w: Workload, d_cap: int,
+                        strategy: str | None = None,
+                        cal: "Calibration | None" = None) -> int:
+    """Native sort ops in the compiled merge path: the two delta sorts
+    dispatch one per global pass under xla_sort (zero on the radix
+    strategies) plus the ONE event-zip rung, which is always a native
+    sort — it doubles as the materialization barrier. Nothing else in
+    the path may sort (the existing stream never re-sorts; that is the
+    point)."""
+    wd = delta_workload(w, d_cap)
+    if strategy is None:
+        strategy = resolve_delta_sort_strategy(cfg, wd, cal)
+    return 2 * sort_op_count(cfg, wd, strategy) + 1
+
+
+def delta_merge_seconds(cfg: EngineConfig, w: Workload, d_cap: int,
+                        cal: "Calibration | None" = None) -> float:
+    """Latency of one delta merge: two delta-bucket sorts + the event-zip
+    rung, the bounded row searches (delta-many queries whose pivot
+    gathers hit the existing stream at random — the cache-miss-bound
+    regime ``hbm_bytes_per_s`` calibrates), the full-width event rank and
+    pointer corrections at SCR throughput, the output splice streams, and
+    the resolved epilogue strategy's own extra."""
+    from .delta import DELTA_RANK_PASSES
+    cal = cal or Calibration()
+    wd = delta_workload(w, d_cap)
+    strat = resolve_delta_sort_strategy(cfg, wd, cal)
+    # All three delta-sized sorts (two streams + the event zip) live in
+    # the ONE compiled update program, so they share a single fixed
+    # dispatch instead of paying per-pass like a standalone Ordering.
+    passes = sort_pass_count(cfg, wd)
+    t_sort = (cal.sort_dispatch_s
+              + 2 * max(0.0, _ordering_seconds(cfg, wd, cal, strat)
+                        - passes * cal.sort_dispatch_s))
+    zipn = 2 * wd.e
+    t_zip = zipn * math.log2(max(2.0, zipn)) / cal.xla_cmp_per_s
+    e_cap = next_pow2(w.e)
+    log_e = reindex_round_count(e_cap)
+    log_d = reindex_round_count(wd.e)
+    log_2d = reindex_round_count(zipn)
+    # three bounded row searches: each pivot gather is a random probe
+    # into the e-sized stream (first rounds are row-local and cached —
+    # charge the uncached tail)
+    t_rows = 3 * min(log_e, 6) * wd.e * 4.0 / cal.hbm_bytes_per_s
+    # full-width passes + delta-local cross-ranks at SCR throughput
+    cmps = (e_cap * log_2d  # the event rank driving the splice
+            + 2 * (w.n + 1) * log_d  # pointer corrections
+            + 3 * wd.e * log_d)  # survivor/activation/occurrence ranks
+    t_rank = cmps / cal.scr_cmps_per_s
+    # splice output traffic: event-row gather (3 cols), survivor gather,
+    # select chain, writeback — ~6 int32 streams over the output
+    t_mem = 6.0 * 4.0 * e_cap / cal.unroll_bytes_per_s
+    rounds = log_2d + 2 * log_d
+    q = e_cap + 2 * (w.n + 1)
+    if delta_epilogue_strategy(cfg, w, d_cap, cal) == "fused":
+        t_extra = rounds * q * 8.0 / cal.unroll_bytes_per_s / 3
+    else:
+        t_extra = (rounds * q * 24.0 / cal.unroll_bytes_per_s / 3
+                   + DELTA_RANK_PASSES * rounds * cal.loop_trip_s / 3)
+    return t_sort + t_zip + t_rows + t_rank + t_mem + t_extra
+
+
+def delta_rebuild_seconds(cfg: EngineConfig, w: Workload, d_cap: int,
+                          cal: "Calibration | None" = None) -> float:
+    """Latency of the fallback: sort the delete stream, tombstone-match it
+    (reconstruction + membership rank over the existing stream), then
+    fully re-convert the combined pow2 edge buffer (Ordering + pointer
+    build + reshaping streams)."""
+    cal = cal or Calibration()
+    wd = delta_workload(w, d_cap)
+    comb = Workload(n=w.n, e=next_pow2(w.e + wd.e), l=w.l, k=w.k, b=w.b)
+    t = _ordering_seconds(cfg, wd, cal,
+                          resolve_delta_sort_strategy(cfg, wd, cal))
+    t /= 2  # one delete-stream sort, not both delta streams
+    t += _ordering_seconds(cfg, comb, cal,
+                           resolve_sort_strategy(cfg, comb, cal))
+    log_d = reindex_round_count(wd.e)
+    log_c = reindex_round_count(comb.e)
+    cmps = (w.e * (reindex_round_count(w.n + 1) + 2 * log_d)
+            + (w.n + 1) * log_c)
+    # tombstone matching probes the existing stream at random per delete —
+    # same cache-miss regime as the merge path's row searches
+    t_rows = 2 * min(reindex_round_count(next_pow2(w.e)), 6) \
+        * wd.e * 4.0 / cal.hbm_bytes_per_s
+    # concat/pad + reshaping + pointer-build streams over the combined
+    # buffer
+    t_mem = 6.0 * 4.0 * comb.e / cal.unroll_bytes_per_s
+    return t + cmps / cal.scr_cmps_per_s + t_rows + t_mem
+
+
+def resolve_delta_mode(cfg: EngineConfig, w: Workload, d_cap: int,
+                       cal: "Calibration | None" = None) -> str:
+    """Resolve ``apply_delta(mode="auto")`` — merge while the delta is a
+    small graph fraction, full rebuild once the delta-linear row searches
+    price above one combined sort. The SAME predicate
+    ``pipeline.apply_delta`` dispatches with, so the census and benchmark
+    record the program that runs."""
+    cal = cal or Calibration()
+    return ("merge"
+            if delta_merge_seconds(cfg, w, d_cap, cal)
+            <= delta_rebuild_seconds(cfg, w, d_cap, cal)
+            else "rebuild")
 
 
 def sample_vid_capacity(w: Workload) -> int:

@@ -80,7 +80,7 @@ def supports_packed_keys(n_nodes: int) -> bool:
     return 2 * _bits_for(n_nodes) <= 31
 
 
-def merge_sorted(a_keys, a_vals, b_keys, b_vals):
+def merge_sorted(a_keys, a_vals, b_keys, b_vals, unroll: bool = False):
     """Stable parallel merge of two sorted (key, val) runs.
 
     A-elements win ties (stability). Fully parallel and scatter-free:
@@ -92,6 +92,9 @@ def merge_sorted(a_keys, a_vals, b_keys, b_vals):
 
     ``a_vals``/``b_vals`` may both be None (keys-only merge, the packed
     Ordering path); then ``out_v`` is None and no payload bytes move.
+    ``unroll`` statically unrolls the two rank searches (zero while ops —
+    the fused-epilogue lowering the delta-merge rung dispatches when
+    ``costmodel`` prices it; the ladder's rungs keep the looped default).
     """
     la = a_keys.shape[0]
     lb = b_keys.shape[0]
@@ -101,9 +104,9 @@ def merge_sorted(a_keys, a_vals, b_keys, b_vals):
     # method replicates an XLA sort per device under GSPMD; the explicit
     # log-depth binary search stays parallel AND sharded (§Perf convert).
     pos_a = jnp.arange(la, dtype=jnp.int32) + rank_in_sorted(
-        b_keys, a_keys, side="left")
+        b_keys, a_keys, side="left", unroll=unroll)
     j = jnp.arange(n, dtype=jnp.int32)
-    r_a = rank_in_sorted(pos_a, j, side="right")
+    r_a = rank_in_sorted(pos_a, j, side="right", unroll=unroll)
     ia = jnp.clip(r_a - 1, 0, la - 1)
     from_a = (r_a > 0) & (jnp.take(pos_a, ia, mode="clip") == j)
     ib = jnp.clip(j - r_a, 0, lb - 1)

@@ -15,14 +15,17 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .graph import COO, CSC, SENTINEL, Subgraph, next_pow2
+from .delta import EdgeDelta, delta_merge, rebuild_coo
+from .graph import COO, CSC, SENTINEL, Subgraph, next_pow2, pad_to
 from .ordering import edge_ordering, edge_ordering_xla, stable_sort_by_key
 from .reshaping import data_reshaping, build_pointer_array
 from .sampling import sample_khop
 from .reindexing import build_reindex_map, reindex_edges
-from .costmodel import (EngineConfig, Workload, pointer_reindex_strategy,
-                        reindex_query_count, resolve_reindex_strategy,
-                        resolve_sort_strategy)
+from .costmodel import (EngineConfig, Workload, delta_epilogue_strategy,
+                        delta_workload, pointer_reindex_strategy,
+                        reindex_query_count, resolve_delta_mode,
+                        resolve_delta_sort_strategy,
+                        resolve_reindex_strategy, resolve_sort_strategy)
 
 
 def kernel_fns(cfg: EngineConfig):
@@ -84,6 +87,76 @@ def convert(coo: COO, cfg: EngineConfig | None = None,
     ptr_fused = pointer_reindex_strategy(cfg, w) == "fused"
     return data_reshaping(sorted_coo, count_fn=count_fn, unroll=ptr_fused,
                           rank_fn=k_rank if ptr_fused else None)
+
+
+def apply_delta(csc: CSC, delta: EdgeDelta, cfg: EngineConfig | None = None,
+                mode: str = "auto", out_capacity: int | None = None) -> CSC:
+    """Incremental conversion: splice one insert/delete batch into a
+    sorted CSC (paper's conversion kept warm under mutating traffic).
+
+    ``mode="merge"`` runs the O(delta) path (``core.delta.delta_merge``:
+    delta-only sorts, SENTINEL-tombstoned deletes through the rank/gather
+    router, ONE merge rung, local pointer patch); ``mode="rebuild"``
+    tombstones + concatenates and re-converts the combined edge buffer;
+    ``"auto"`` is resolved here through the Table-I delta terms
+    (``costmodel.resolve_delta_mode``) on this (capacity, delta-bucket)
+    workload — so a delta that is a large fraction of the graph falls back
+    to the rebuild the model prices cheaper. Both modes return a CSC with
+    ``out_capacity`` (default: the input's) index slots, bit-identical to
+    a from-scratch :func:`convert` of the post-update edge list. The delta
+    sorts dispatch through the SAME reduction machinery as every Ordering
+    but resolve through ``costmodel.resolve_delta_sort_strategy``, which
+    prices the thunk-materialized output the splice gathers need (the
+    native sort wins at delta buckets); every rank pass lowers fused or
+    unfused as ``costmodel.delta_epilogue_strategy`` prices it.
+
+    The caller guarantees the surviving edge count fits ``out_capacity``
+    (``engine.service.PreprocService.apply_delta`` grows the bucket on
+    overflow — a traced count cannot raise here).
+    """
+    cfg = cfg or EngineConfig()
+    k_sort, k_count, merge_fn, digit_pass_fn, k_rank, _ = kernel_fns(cfg)
+    e_cap = csc.idx.shape[0]
+    d_cap = delta.capacity
+    w = Workload(n=csc.n_nodes, e=e_cap)
+    if mode == "auto":
+        mode = resolve_delta_mode(cfg, w, d_cap)
+    if mode not in ("merge", "rebuild"):
+        raise ValueError(f"unknown delta mode {mode!r}")
+    d_strategy = resolve_delta_sort_strategy(cfg, delta_workload(w, d_cap))
+    fused = delta_epilogue_strategy(cfg, w, d_cap) == "fused"
+
+    def delta_sort_fn(k, v, bound):
+        return stable_sort_by_key(k, v, bound, chunk=min(cfg.w_upe, d_cap),
+                                  radix_bits=cfg.radix_bits,
+                                  map_batch=cfg.n_upe,
+                                  chunk_sort_fn=k_sort, merge_fn=merge_fn,
+                                  strategy=d_strategy,
+                                  fan_in=cfg.merge_fan_in,
+                                  digit_pass_fn=digit_pass_fn)
+
+    if mode == "merge":
+        return delta_merge(csc, delta, sort_fn=delta_sort_fn, unroll=fused,
+                           out_capacity=out_capacity)
+    coo = rebuild_coo(csc, delta, sort_fn=delta_sort_fn, unroll=fused)
+    wc = Workload(n=coo.n_nodes, e=coo.capacity)
+    sorted_coo = edge_ordering(coo, chunk=min(cfg.w_upe, coo.capacity),
+                               radix_bits=cfg.radix_bits,
+                               map_batch=cfg.n_upe, chunk_sort_fn=k_sort,
+                               merge_fn=merge_fn, mode=cfg.sort_mode,
+                               strategy=resolve_sort_strategy(cfg, wc),
+                               fan_in=cfg.merge_fan_in,
+                               digit_pass_fn=digit_pass_fn)
+    ptr_fused = pointer_reindex_strategy(cfg, wc) == "fused"
+    full = data_reshaping(sorted_coo, count_fn=k_count, unroll=ptr_fused,
+                          rank_fn=k_rank if ptr_fused else None)
+    out_cap = e_cap if out_capacity is None else out_capacity
+    idx = (full.idx[:out_cap] if out_cap <= full.idx.shape[0]
+           else pad_to(full.idx, out_cap, SENTINEL))
+    ptr = full.ptr
+    if csc.ptr.shape[0] > ptr.shape[0]:  # preserve padded pointer tails
+        ptr = pad_to(ptr, csc.ptr.shape[0], ptr[-1])
+    return CSC(ptr=ptr, idx=idx, n_edges=full.n_edges, n_nodes=csc.n_nodes)
 
 
 def convert_xla(coo: COO) -> CSC:

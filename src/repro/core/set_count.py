@@ -108,13 +108,40 @@ def rank_in_sorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray,
 
     ``unroll=True`` emits the rounds statically instead of as a
     ``fori_loop`` — the compiled program has ZERO while ops (the "fused"
-    reindex/pointer epilogue: no loop dispatch between rounds, at the cost
-    of materializing per-round intermediates). Both variants carry the
-    ``active`` freeze guard, so results are bit-identical; the cost model
+    reindex/pointer epilogue: no loop dispatch between rounds). The
+    unrolled variant is a single-carry binary *lifting* (``pos += step``
+    when ``arr[pos+step-1] OP q``, pow2 steps descending): each round
+    depends only on the previous round's one materialized rank array, so
+    XLA fuses round k into one kernel instead of rematerializing a
+    two-sided (lo, hi) carry chain quadratically (observed on the CPU
+    backend: the un-materialized ``hi`` half got recomputed inside every
+    later round's fusion). Greedy pow2 descent over a monotone predicate
+    lands on the exact rank, so results stay bit-identical to the
+    ``fori_loop`` bisection; the cost model
     (``costmodel.resolve_reindex_strategy``) prices the trade.
     """
     n = sorted_arr.shape[0]
     steps = max(1, int(n).bit_length())  # search range is n+1 wide
+
+    if unroll:
+        pos = jnp.zeros(queries.shape, jnp.int32)
+        for s in reversed(range(steps)):  # static rounds — no while op
+            cand = pos + (1 << s)
+            pivot = jnp.take(sorted_arr, jnp.minimum(cand - 1, n - 1),
+                             mode="clip")
+            ok = (pivot < queries) if side == "left" else \
+                (pivot <= queries)
+            pos = jnp.where(ok & (cand <= n), cand, pos)
+        # No optimization_barrier on the carry: the CPU pipeline deletes
+        # barriers before fusion anyway, and the op has no vmap batching
+        # rule (sample_subgraph_batched maps this path). The fusion hazard
+        # the single carry leaves — a consumer gather re-deriving pos's
+        # whole compare chain elementally — is handled where it bites:
+        # inputs to this rank must be thunk-materialized buffers and
+        # multi-consumers must read through ONE gather (see
+        # core/delta.py's event-zip sort rung and 3-column event row).
+        return pos.astype(jnp.int32)
+
     lo = jnp.zeros(queries.shape, jnp.int32)  # invariant: arr[lo-1] OP q
     hi = jnp.full(queries.shape, n, jnp.int32)
 
@@ -129,11 +156,57 @@ def rank_in_sorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray,
         hi = jnp.where(active & ~go_right, mid, hi)
         return lo, hi
 
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo.astype(jnp.int32)
+
+
+def rank_in_sorted2(sorted_a: jnp.ndarray, sorted_b: jnp.ndarray,
+                    query_a: jnp.ndarray, query_b: jnp.ndarray,
+                    side: str = "left", unroll: bool = False) -> jnp.ndarray:
+    """``rank_in_sorted`` over lexicographic ``(a, b)`` pairs — the
+    two-column rank primitive for VID spaces too wide to pack ``(dst,
+    src)`` into one int32 key (``ordering.supports_packed_keys`` False).
+
+    ``(sorted_a, sorted_b)`` are parallel columns of a pair-sorted stream;
+    each query pair ``(query_a[t], query_b[t])`` gets its left/right rank
+    under the lexicographic order. Same log-depth batched binary search as
+    the scalar rank (one compare+two gathers per round, every query
+    independent), same ``unroll``/``active``-freeze contract as
+    ``rank_in_sorted`` — the pair-column primitive for any consumer whose
+    VID space defeats key packing (the incremental-delta path itself stays
+    mode-agnostic: its row search brackets with ``ptr`` gathers instead).
+    """
+    n = sorted_a.shape[0]
+    steps = max(1, int(n).bit_length())
+
     if unroll:
-        lohi = (lo, hi)
-        for _ in range(steps):  # static rounds — no while op in the HLO
-            lohi = body(0, lohi)
-        lo, _ = lohi
-    else:
-        lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+        # single-carry binary lifting — same rationale as the scalar rank
+        pos = jnp.zeros(query_a.shape, jnp.int32)
+        for s in reversed(range(steps)):  # static rounds — no while op
+            cand = pos + (1 << s)
+            safe = jnp.minimum(cand - 1, n - 1)
+            pa = jnp.take(sorted_a, safe, mode="clip")
+            pb = jnp.take(sorted_b, safe, mode="clip")
+            lt_b = (pb < query_b) if side == "left" else (pb <= query_b)
+            ok = (pa < query_a) | ((pa == query_a) & lt_b)
+            pos = jnp.where(ok & (cand <= n), cand, pos)
+        return pos.astype(jnp.int32)  # no barrier — see rank_in_sorted
+
+    lo = jnp.zeros(query_a.shape, jnp.int32)
+    hi = jnp.full(query_a.shape, n, jnp.int32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        active = lo < hi
+        mid = (lo + hi) >> 1
+        safe = jnp.clip(mid, 0, n - 1)
+        pa = jnp.take(sorted_a, safe, mode="clip")
+        pb = jnp.take(sorted_b, safe, mode="clip")
+        lt_b = (pb < query_b) if side == "left" else (pb <= query_b)
+        go_right = (pa < query_a) | ((pa == query_a) & lt_b)
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
     return lo.astype(jnp.int32)

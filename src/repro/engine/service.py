@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.core import pipeline
 from repro.core.costmodel import (Calibration, EngineConfig, Workload,
                                   bitstream_library)
+from repro.core.delta import EdgeDelta
 from repro.core.graph import COO, SENTINEL, next_pow2, pad_to
 from repro.core.reconfig import (RECONFIG_S_PARTIAL, ReconfigDecision,
                                  decide)
@@ -45,6 +46,8 @@ sample_jit = jax.jit(pipeline.sample_subgraph, static_argnames=("fanouts",
 sample_batched_jit = jax.jit(pipeline.sample_subgraph_batched,
                              static_argnames=("fanouts", "cfg"))
 convert_jit = jax.jit(pipeline.convert, static_argnames=("cfg",))
+apply_delta_jit = jax.jit(pipeline.apply_delta,
+                          static_argnames=("cfg", "mode", "out_capacity"))
 
 
 def preprocess_cache_size() -> int:
@@ -125,6 +128,55 @@ def bucket_seed_rows(seed_rows: jnp.ndarray) -> jnp.ndarray:
         return seed_rows
     return jnp.pad(seed_rows, ((0, 0), (0, cap - seed_rows.shape[1])),
                    constant_values=int(SENTINEL))
+
+
+def apply_delta_cache_size() -> int:
+    """Compiled-program count behind the module-level delta-update entry
+    (the serve-side streaming-update zero-recompile guards assert against
+    it).
+
+    Example::
+
+        >>> isinstance(apply_delta_cache_size(), int)
+        True
+    """
+    try:
+        return int(apply_delta_jit._cache_size())
+    except AttributeError as e:  # private PjitFunction API (jax upgrade?)
+        raise NotImplementedError(
+            "jax.jit cache introspection (_cache_size) is unavailable on "
+            "this JAX version — update apply_delta_cache_size() to the "
+            "new API") from e
+
+
+def bucket_delta(delta: EdgeDelta) -> EdgeDelta:
+    """Pad both delta streams to the pow2 delta bucket (SENTINEL tails).
+
+    The bucket is the jit-cache axis for updates: every delta up to the
+    bucket's capacity re-enters the SAME compiled ``apply_delta`` program
+    (padded rows are SENTINEL in both columns, which the merge treats as
+    absent).
+
+    Example::
+
+        >>> from repro.core.delta import EdgeDelta
+        >>> d = EdgeDelta.from_arrays([0, 1, 2], [1, 2, 0], [0], [1],
+        ...                           n_nodes=4)
+        >>> b = bucket_delta(d)
+        >>> b.capacity, int(b.n_ins), int(b.n_del)
+        (4, 3, 1)
+        >>> bucket_delta(b) is b  # already-pow2 buffers pass through
+        True
+    """
+    cap = next_pow2(delta.capacity)
+    if cap == delta.capacity:
+        return delta
+    return EdgeDelta(ins_dst=pad_to(delta.ins_dst, cap, SENTINEL),
+                     ins_src=pad_to(delta.ins_src, cap, SENTINEL),
+                     del_dst=pad_to(delta.del_dst, cap, SENTINEL),
+                     del_src=pad_to(delta.del_src, cap, SENTINEL),
+                     n_ins=delta.n_ins, n_del=delta.n_del,
+                     n_nodes=delta.n_nodes)
 
 
 def bucket_batch(batch_nodes: jnp.ndarray) -> jnp.ndarray:
@@ -341,6 +393,61 @@ class PreprocService:
         self._keys_seen.add((cfg.key, bucket))
         self.stats.n_unique_keys = len(self._keys_seen)
         return sample_batched_jit(csc, rows, self.fanouts, keys, cfg)
+
+    def apply_delta(self, csc, delta: EdgeDelta,
+                    cfg: EngineConfig | None = None, mode: str = "auto"):
+        """Streamed graph update: bucket the delta, dispatch the
+        incremental conversion, return the post-update CSC.
+
+        The delta is padded to its pow2 bucket so repeated updates of any
+        size up to the bucket hit ONE compiled program behind the
+        module-level :data:`apply_delta_jit` cache; the dispatch is
+        accounted under ``(EngineConfig.key, (e_cap, d_bucket, out_cap))``.
+        When the surviving-edge upper bound (``n_edges + n_ins``, checked
+        host-side — both counts are concrete between dispatches) would
+        overflow the index buffer, the output capacity grows to the next
+        pow2 bucket — a one-time recompile per growth step, exactly like
+        any other bucket promotion.
+
+        Example — update keeps the conversion warm, cache stays keyed on
+        the bucket::
+
+            >>> import jax.numpy as jnp, numpy as np
+            >>> from repro.core import pipeline
+            >>> from repro.core.delta import EdgeDelta
+            >>> from repro.core.graph import COO, random_coo
+            >>> rng = np.random.default_rng(0)
+            >>> dst, src = random_coo(rng, 64, 200)
+            >>> coo = COO.from_arrays(dst, src, 64, capacity=256)
+            >>> csc = pipeline.convert(coo)
+            >>> svc = PreprocService(fanouts=(2, 2))
+            >>> d = EdgeDelta.from_arrays([3], [5], [int(dst[0])],
+            ...                           [int(src[0])], n_nodes=64)
+            >>> out = svc.apply_delta(csc, d)
+            >>> int(out.n_edges)  # one insert, one delete
+            200
+            >>> out.idx.shape == csc.idx.shape
+            True
+            >>> svc.stats.n_unique_keys
+            1
+        """
+        delta_b = bucket_delta(delta)
+        if cfg is None:
+            if self.active_cfg is None:
+                w = Workload(n=csc.n_nodes, e=int(csc.idx.shape[0]),
+                             l=len(self.fanouts), k=max(self.fanouts))
+                self.active_cfg = self.decide(w).config
+                self.stats.n_reconfigs += 1
+            cfg = self.active_cfg
+        e_cap = int(csc.idx.shape[0])
+        need = int(csc.n_edges) + int(delta_b.n_ins)
+        out_cap = e_cap if need <= e_cap else next_pow2(need)
+        bucket = (e_cap, delta_b.capacity, out_cap)
+        self.stats.n_dispatches += 1
+        self._keys_seen.add((cfg.key, bucket))
+        self.stats.n_unique_keys = len(self._keys_seen)
+        return apply_delta_jit(csc, delta_b, cfg=cfg, mode=mode,
+                               out_capacity=out_cap)
 
     @staticmethod
     def cache_size() -> int:

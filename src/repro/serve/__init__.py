@@ -16,7 +16,7 @@ the slot lifecycle and ``launch/serve.py`` for the CLI.
 """
 from .engine import ServeEngine
 from .feeder import AdmissionFeeder, PreparedAdmission
-from .gnn import GnnServeEngine
+from .gnn import GnnServeEngine, UPDATE_MARKER
 from .queue import RequestQueue
 from .request import Request, RequestState
 from .scheduler import NO_TOKEN, Scheduler, lm_token_route
@@ -25,5 +25,5 @@ from .slots import ServeStats, SlotEngineBase
 __all__ = [
     "AdmissionFeeder", "GnnServeEngine", "NO_TOKEN", "PreparedAdmission",
     "Request", "RequestQueue", "RequestState", "Scheduler", "ServeEngine",
-    "ServeStats", "SlotEngineBase", "lm_token_route",
+    "ServeStats", "SlotEngineBase", "UPDATE_MARKER", "lm_token_route",
 ]

@@ -35,11 +35,17 @@ import numpy as np
 
 from repro.core import pipeline
 from repro.core.costmodel import EngineConfig
+from repro.core.delta import EdgeDelta
 from repro.core.graph import CSC, SENTINEL, next_pow2
 from repro.models.gnn import GNNConfig, gnn_apply, subgraph_batch
 
 from .request import Request
 from .slots import SlotEngineBase
+
+# Control-request prompt marker: a streamed graph update enqueued by
+# ``submit_update`` (its EdgeDelta rides ``Request.payload``; the row the
+# feeder pads from this marker is never read).
+UPDATE_MARKER = -2
 
 
 def build_slot_fn(gcfg: GNNConfig, fanouts: tuple[int, ...], seed_cap: int,
@@ -131,13 +137,22 @@ class GnnServeEngine(SlotEngineBase):
     preprocessing configuration (``cfg``) pins the whole dispatch stack —
     sort_strategy, reindex_strategy, Pallas routing — exactly as
     ``engine.service`` dispatches it.
+
+    The graph itself is mutable under traffic: ``submit_update(inserts,
+    deletes)`` enqueues a ``delta_cap``-bucketed edge batch on the SAME
+    FIFO; the run loop holds it until in-flight requests retire, splices
+    it in via the incremental conversion (O(delta) ``apply_delta``, not a
+    re-convert) and resumes admissions against the updated CSC — shapes
+    pinned to the serve buckets, so a whole update/inference stream runs
+    on the warm step program with zero recompiles.
     """
 
     def __init__(self, gcfg: GNNConfig, params, csc: CSC,
                  features: jnp.ndarray, *,
                  fanouts: tuple[int, ...] | None = None, n_slots: int = 4,
                  seed_cap: int = 8, cfg: EngineConfig | None = None,
-                 key_seed: int = 0, feeder_depth: int = 2):
+                 key_seed: int = 0, feeder_depth: int = 2,
+                 delta_cap: int = 64):
         fanouts = tuple(fanouts if fanouts is not None
                         else gcfg.sample_sizes)
         if not fanouts:
@@ -160,6 +175,7 @@ class GnnServeEngine(SlotEngineBase):
         self.gcfg = gcfg
         self.fanouts = fanouts
         self.seed_cap = seed_cap
+        self.delta_cap = next_pow2(delta_cap)
         self.engine_cfg = cfg or EngineConfig()
         self.n_nodes = csc.n_nodes
         self.base_key = jax.random.PRNGKey(key_seed)
@@ -217,6 +233,63 @@ class GnnServeEngine(SlotEngineBase):
             raise ValueError(f"seed ids out of range [0, {self.n_nodes}): "
                              f"{bad}")
         return self._enqueue(seeds, max_new=1)
+
+    def submit_update(self, inserts, deletes=()) -> Request:
+        """Enqueue one streamed graph update (edge inserts + deletes).
+
+        ``inserts``/``deletes`` are iterables of ``(dst, src)`` pairs; both
+        are bucketed to the engine's fixed ``delta_cap`` so EVERY update
+        re-enters the one compiled ``apply_delta`` program (the same pow2
+        discipline as seed rows). The update rides the request FIFO: it
+        applies only once every earlier request retired, and every later
+        request samples the post-update graph. Its Request completes with
+        empty ``tokens_out`` when the update has been applied.
+        """
+        ins = [(int(d), int(s)) for d, s in inserts]
+        dels = [(int(d), int(s)) for d, s in deletes]
+        if not ins and not dels:
+            raise ValueError("empty update: no inserts and no deletes")
+        if max(len(ins), len(dels)) > self.delta_cap:
+            raise ValueError(
+                f"update size {max(len(ins), len(dels))} exceeds the "
+                f"engine delta bucket {self.delta_cap} — split the batch "
+                f"or construct the engine with a larger delta_cap")
+        bad = [v for dd, ss in ins + dels for v in (dd, ss)
+               if not 0 <= v < self.n_nodes]
+        if bad:
+            raise ValueError(f"update VIDs out of range [0, {self.n_nodes})"
+                             f": {bad}")
+        delta = EdgeDelta.from_arrays(
+            [d for d, _ in ins], [s for _, s in ins],
+            [d for d, _ in dels], [s for _, s in dels],
+            n_nodes=self.n_nodes, capacity=self.delta_cap)
+        return self._enqueue([UPDATE_MARKER], max_new=0, payload=delta)
+
+    def _classify_prep(self, prep) -> str:
+        return "apply" if isinstance(prep.request.payload, EdgeDelta) \
+            else "seat"
+
+    def _apply_control(self, prep) -> None:
+        """Apply one held graph update between steps: incremental
+        conversion through the module-level ``apply_delta_jit`` cache
+        (``engine.service``), output capacity pinned to the serve graph's
+        bucket — the post-update CSC has the exact shapes of the old one,
+        so swapping it into ``params`` costs ZERO step recompiles
+        (asserted by tests/test_gnn_serve.py via step_cache_size()).
+        """
+        from repro.engine.service import apply_delta_jit
+        csc = self.params["csc"]
+        cap = int(csc.idx.shape[0])
+        delta = prep.request.payload
+        if int(csc.n_edges) + int(delta.n_ins) > cap:
+            raise RuntimeError(
+                f"graph update overflows the serve index bucket ({cap} "
+                f"slots): growing the bucket would recompile the step — "
+                f"restart the engine with a larger graph capacity")
+        self.params = {**self.params,
+                       "csc": apply_delta_jit(csc, delta,
+                                              cfg=self.engine_cfg,
+                                              out_capacity=cap)}
 
     def request_key(self, rid: int) -> jax.Array:
         """The per-request PRNG key — folded from the request id alone

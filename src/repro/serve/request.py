@@ -40,6 +40,11 @@ class Request:
     state: RequestState = RequestState.QUEUED
     slot: int | None = None
     tokens_out: list[int] = dataclasses.field(default_factory=list)
+    # Control requests (e.g. a streamed graph update) ride the SAME FIFO
+    # queue as inference — the payload is whatever the engine's
+    # ``_apply_control`` consumes (an EdgeDelta for the GNN engine); the
+    # prompt row is a marker the feeder pads like any other.
+    payload: object | None = None
     enqueue_t: float = dataclasses.field(default_factory=time.perf_counter)
     admit_t: float | None = None
     finish_t: float | None = None

@@ -31,13 +31,14 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 
 import jax.numpy as jnp
 import numpy as np
 
 from .feeder import AdmissionFeeder
 from .queue import RequestQueue
-from .request import Request
+from .request import Request, RequestState
 from .scheduler import Scheduler
 
 
@@ -95,6 +96,12 @@ class SlotEngineBase:
         # their step time; the LM engine admits rarely and keeps the
         # per-slot path.
         self._admit_many_fn = None
+        # Control admission (streamed graph updates): a prepared request
+        # classified "apply" is HELD here until every in-flight request
+        # retires, then applied between steps — and while held it blocks
+        # the admission poll, so requests queued after an update see the
+        # post-update state (FIFO consistency).
+        self._held_prep = None
 
     # ----------------------------------------------------- cache discipline
     def step_cache_size(self) -> int:
@@ -109,13 +116,17 @@ class SlotEngineBase:
                 "on this JAX version") from e
 
     # ------------------------------------------------------------ admission
-    def _enqueue(self, prompt: list[int], max_new: int) -> Request:
+    def _enqueue(self, prompt: list[int], max_new: int,
+                 payload=None) -> Request:
         """Wrap a validated payload row in a Request and queue it
-        (thread-safe); subclasses validate in their typed ``submit``."""
+        (thread-safe); subclasses validate in their typed ``submit``.
+        ``payload`` rides control requests (attached BEFORE the queue put
+        so the feeder thread can never see a half-built request)."""
         with self._rid_lock:
             rid = self._rid
             self._rid += 1
-        req = Request(rid=rid, prompt=prompt, max_new=max_new)
+        req = Request(rid=rid, prompt=prompt, max_new=max_new,
+                      payload=payload)
         self.queue.put(req)
         return req
 
@@ -148,6 +159,29 @@ class SlotEngineBase:
         wave into fixed [n_slots, ...] arrays plus a valid mask."""
         raise NotImplementedError
 
+    def _classify_prep(self, prep) -> str:
+        """``"seat"`` (slot admission) or ``"apply"`` (control request the
+        run loop applies between steps once the device quiesces). The base
+        engine seats everything; clients with a control plane (streamed
+        graph updates) override."""
+        return "seat"
+
+    def _apply_control(self, prep) -> None:
+        """Apply one held control request (device is quiescent: no active
+        slots, nothing in flight). Clients that classify must implement."""
+        raise NotImplementedError
+
+    def _apply_held(self, completed: list[Request]) -> None:
+        prep, self._held_prep = self._held_prep, None
+        self._apply_control(prep)
+        req = prep.request
+        req.state = RequestState.FINISHED
+        if req.admit_t is None:
+            req.admit_t = time.perf_counter()
+        req.finish_t = time.perf_counter()
+        self.stats.retired += 1
+        completed.append(req)
+
     def _try_admit(self, feeder: AdmissionFeeder,
                    timeout: float | None = None) -> int:
         """Seat prepared requests while slots are free; each poll waits up
@@ -155,11 +189,15 @@ class SlotEngineBase:
         poll — the idle loop's block-for-work knob and the admission
         window's fill knob. The wave lands in ONE ``_admit_many_fn``
         dispatch when the client provides it, else one ``_admit_fn``
-        dispatch per request."""
+        dispatch per request. A control request ends the wave: it is held
+        for the run loop and nothing polls past it until it applies."""
         wave = []
-        while self.scheduler.has_free_slot:
+        while self.scheduler.has_free_slot and self._held_prep is None:
             prep = feeder.poll(timeout=timeout)
             if prep is None:
+                break
+            if self._classify_prep(prep) == "apply":
+                self._held_prep = prep
                 break
             wave.append((self.scheduler.admit(prep), prep))
         if not wave:
@@ -214,6 +252,12 @@ class SlotEngineBase:
                         pending = None
                         continue  # processing may have freed cooling slots
                     self.scheduler.flush_cooling()
+                    if self._held_prep is not None:
+                        # Quiescent: nothing active, nothing in flight —
+                        # apply the held control request, then resume
+                        # admitting the traffic queued behind it.
+                        self._apply_held(completed)
+                        continue
                     if feeder.done:
                         break
                     self._try_admit(feeder, timeout=0.05)

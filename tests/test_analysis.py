@@ -281,4 +281,4 @@ def test_registry_summary_shape():
     assert s["library_size"] == 81
     assert s["convert_cases"] >= 972
     assert set(s["contracts"]) == {"convert", "sample", "shard", "serve",
-                                   "gnn_serve"}
+                                   "gnn_serve", "delta_update"}

@@ -181,6 +181,96 @@ def test_gnn_apply_batched_lanes_match_single():
                                       np.asarray(want))
 
 
+# ------------------------------------------------------- streaming updates
+def test_interleaved_updates_and_inference_match_sequential_oracle():
+    """Living-graph serving: updates and inference interleave on one FIFO.
+    Every prediction equals the sequential oracle that replays the SAME
+    submission order (each query sampling the graph as of its position in
+    the stream), the final CSC is bit-identical to oracle-chained
+    apply_delta, and the whole stream runs with ZERO step recompiles
+    after warmup — the post-update CSC keeps the exact serve shapes."""
+    from repro.core.delta import EdgeDelta
+    from repro.engine.service import apply_delta_jit
+    rng = np.random.default_rng(5)
+    eng = _make_engine(n_slots=2, delta_cap=16)
+    edges = list(zip(_dst.tolist(), _src.tolist()))
+
+    def rand_update():
+        ins = [(int(rng.integers(N_NODES)), int(rng.integers(N_NODES)))
+               for _ in range(4)]
+        dels = [edges[int(rng.integers(len(edges)))] for _ in range(3)]
+        return ins, dels
+
+    # warmup: compile the step AND the delta-apply program
+    history = [("q", [0, 1, 2]), ("u", *rand_update()), ("q", [3, 4])]
+    for item in history:
+        if item[0] == "q":
+            eng.submit(item[1])
+        else:
+            eng.submit_update(item[1], item[2])
+    eng.close_submissions()
+    completed = eng.run()
+    base_cache = eng.step_cache_size()
+
+    eng.reopen()
+    stream = []
+    for i in range(12):
+        if i % 3 == 2:
+            stream.append(("u", *rand_update()))
+            eng.submit_update(stream[-1][1], stream[-1][2])
+        else:
+            seeds = rng.choice(
+                N_NODES, int(rng.integers(1, eng.seed_cap + 1)),
+                replace=False).tolist()
+            stream.append(("q", seeds))
+            eng.submit(seeds)
+    eng.close_submissions()
+    completed += eng.run()
+    assert eng.step_cache_size() == base_cache  # zero recompiles
+
+    # sequential oracle: replay the submission history in rid order,
+    # chaining apply_delta exactly where the updates sat in the stream
+    fn = jax.jit(eng.slot_fn)
+    oracle_csc = CSC_G
+    want = {}
+    for rid, item in enumerate(history + stream):
+        if item[0] == "q":
+            seeds = item[1]
+            row = np.full((eng.seed_cap,), int(SENTINEL), np.int32)
+            row[:len(seeds)] = seeds
+            bundle = {"gnn": eng.params["gnn"], "csc": oracle_csc,
+                      "features": FEATS}
+            preds = fn(bundle, jnp.asarray(row), eng.request_key(rid))
+            want[rid] = np.asarray(preds)[:len(seeds)].tolist()
+        else:
+            _, ins, dels = item
+            delta = EdgeDelta.from_arrays(
+                [d for d, _ in ins], [s for _, s in ins],
+                [d for d, _ in dels], [s for _, s in dels],
+                n_nodes=N_NODES, capacity=eng.delta_cap)
+            oracle_csc = apply_delta_jit(
+                oracle_csc, delta, cfg=eng.engine_cfg,
+                out_capacity=int(oracle_csc.idx.shape[0]))
+            want[rid] = []
+    assert len(completed) == len(history) + len(stream)
+    for req in completed:
+        assert req.tokens_out == want[req.rid], req.rid
+    np.testing.assert_array_equal(np.asarray(eng.params["csc"].ptr),
+                                  np.asarray(oracle_csc.ptr))
+    np.testing.assert_array_equal(np.asarray(eng.params["csc"].idx),
+                                  np.asarray(oracle_csc.idx))
+
+
+def test_submit_update_validates_size_and_vids():
+    eng = _make_engine(delta_cap=8)
+    with pytest.raises(ValueError):
+        eng.submit_update([], [])
+    with pytest.raises(ValueError):
+        eng.submit_update([(0, 1)] * 9, [])  # over the delta bucket
+    with pytest.raises(ValueError):
+        eng.submit_update([(0, N_NODES)], [])  # VID out of range
+
+
 def test_service_sample_batched_buckets_and_caches():
     """The engine-service batched entry: per-row pow2 SENTINEL bucketing,
     (config, bucket) accounting, zero recompiles on re-dispatch."""
